@@ -1,0 +1,36 @@
+"""Fig. 10: range-delete length sweep — throughput, range-delete latency,
+disk size (space amplification), memory footprint.  Balanced workload."""
+
+from __future__ import annotations
+
+from .harness import SCALE, WorkloadMix, emit, preload, run_workload, \
+    standard_tree
+
+STRATEGIES = ("decomp", "lookup_delete", "scan_delete", "lrr", "gloran")
+U = 1 << 21
+
+
+def run():
+    n_pre = 120_000 * SCALE
+    for length in (16, 128, 1024):
+        for strat in STRATEGIES:
+            n_ops = 12_000 * SCALE
+            if strat == "decomp" and length == 1024:
+                n_ops = 4_000 * SCALE  # tombstone flood; keep bounded
+            tree = standard_tree(strat, universe=U)
+            preload(tree, n_pre, U)
+            mix = WorkloadMix(lookup=0.475, update=0.475,
+                              range_delete=0.05, range_delete_len=length,
+                              universe=U)
+            res = run_workload(tree, n_ops, mix, seed=length)
+            emit(f"fig10/len{length}/{strat}",
+                 1e6 / max(res.ops_per_sec, 1e-9),
+                 f"modeled_ops_s={res.modeled_ops_per_sec():.0f} "
+                 f"ops_s={res.ops_per_sec:.0f} "
+                 f"rdel_us={res.us_per_op('range_delete'):.1f} "
+                 f"disk_mb={res.disk_bytes / 1e6:.1f} "
+                 f"mem_mb={res.memory_bytes / 1e6:.2f}")
+
+
+if __name__ == "__main__":
+    run()

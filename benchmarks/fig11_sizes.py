@@ -1,0 +1,43 @@
+"""Fig. 11: entry-size and data-scale sweeps (GLORAN vs the LRR SOTA).
+
+(a) key size 64/256/1024 B (entry fixed ~1 KB); (b) value size 256/2048 B
+(key 64 B); (c) data scale 1e5 vs 4e5 preloaded entries.  Balanced
+workload with 5% range deletes, as in the paper.
+"""
+
+from __future__ import annotations
+
+from .harness import SCALE, WorkloadMix, emit, preload, run_workload, \
+    standard_tree
+
+U = 1 << 21
+MIX = WorkloadMix(lookup=0.475, update=0.475, range_delete=0.05,
+                  range_delete_len=128, universe=U)
+
+
+def _one(tag, strat, key_size, value_size, n_pre, n_ops):
+    tree = standard_tree(strat, universe=U, key_size=key_size,
+                         value_size=value_size)
+    preload(tree, n_pre, U)
+    res = run_workload(tree, n_ops, MIX, seed=1)
+    emit(f"fig11/{tag}/{strat}", 1e6 / max(res.ops_per_sec, 1e-9),
+         f"modeled_ops_s={res.modeled_ops_per_sec():.0f} "
+         f"ops_s={res.ops_per_sec:.0f} "
+         f"lookup_io={res.io_per_op('lookup'):.3f}")
+
+
+def run():
+    n_pre, n_ops = 100_000 * SCALE, 15_000 * SCALE
+    for k in (64, 256, 1024):
+        for s in ("lrr", "gloran"):
+            _one(f"key{k}", s, k, 1024 - k, n_pre, n_ops)
+    for v in (256, 2048):
+        for s in ("lrr", "gloran"):
+            _one(f"val{v}", s, 64, v, n_pre, n_ops)
+    for scale_n in (100_000, 400_000):
+        for s in ("lrr", "gloran"):
+            _one(f"scale{scale_n}", s, 256, 768, scale_n * SCALE, n_ops)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Fig. 13 (a)/(b): LSM-DRtree vs LSM-Rtree tail latency; index query cost
+with and without EVE.
+
+(a) point-lookup I/O percentiles (p50/p95/p99) for GLORAN vs GLORAN0
+    (LSM-Rtree global index) under growing range-delete counts;
+(b) per-query global-index I/O for LSM-R / LSM-DR / LSM-DR + EVE.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (GloranConfig, GloranIndex, IOStats, LSMDRTreeConfig,
+                        RAEConfig)
+
+from .harness import SCALE, emit
+
+U = 1 << 22
+
+
+def _build(use_drtree: bool, use_eve: bool, n_deletes: int, seed=0):
+    g = GloranIndex(GloranConfig(
+        index=LSMDRTreeConfig(buffer_capacity=2048, size_ratio=10),
+        eve=RAEConfig(capacity=50_000, key_universe=U),
+        use_eve=use_eve, use_drtree=use_drtree))
+    rng = np.random.default_rng(seed)
+    for seq in range(1, n_deletes + 1):
+        lo = int(rng.integers(0, U - 256))
+        g.range_delete(lo, lo + int(rng.integers(16, 256)), seq)
+    return g, rng
+
+
+def run():
+    for n_del in (20_000 * SCALE, 100_000 * SCALE):
+        # (a) tail latency: per-query index I/O distribution.
+        for name, dr in (("lsm_rtree", False), ("lsm_drtree", True)):
+            g, rng = _build(dr, False, n_del)
+            samples = []
+            for _ in range(400):
+                k = int(rng.integers(0, U))
+                s = int(rng.integers(0, n_del))
+                r0 = g.io.reads
+                g.is_deleted(k, s)
+                samples.append(g.io.reads - r0)
+            p50, p95, p99 = np.percentile(samples, [50, 95, 99])
+            emit(f"fig13a/n{n_del}/{name}", 0.0,
+                 f"io_p50={p50:.1f} io_p95={p95:.1f} io_p99={p99:.1f}")
+        # (b) index query cost with/without EVE (valid keys dominate).
+        for name, eve in (("lsm_dr", False), ("lsm_dr_eve", True)):
+            g, rng = _build(True, eve, n_del, seed=1)
+            keys = rng.integers(0, U, size=3000).astype(np.uint64)
+            seqs = np.full(3000, n_del + 10, dtype=np.uint64)  # post-delete
+            r0 = g.io.reads
+            g.is_deleted_batch(keys, seqs)
+            emit(f"fig13b/n{n_del}/{name}", 0.0,
+                 f"io_per_query={(g.io.reads - r0) / 3000:.4f}")
+
+
+if __name__ == "__main__":
+    run()

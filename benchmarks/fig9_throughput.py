@@ -1,0 +1,44 @@
+"""Fig. 9: throughput across workloads x range-delete ratios x methods.
+
+Workloads: lookup-heavy (90/10), balanced (50/50), update-heavy (10/90);
+range-delete ratio replaces part of the updates.  Derived column:
+ops/s | lookup I/O per op | range-delete I/O per op.
+"""
+
+from __future__ import annotations
+
+from .harness import SCALE, WorkloadMix, emit, preload, run_workload, \
+    standard_tree
+
+STRATEGIES = ("decomp", "lookup_delete", "scan_delete", "lrr", "gloran")
+WORKLOADS = {
+    "lookup_heavy": (0.9, 0.1),
+    "balanced": (0.5, 0.5),
+    "update_heavy": (0.1, 0.9),
+}
+U = 1 << 21
+
+
+def run():
+    n_pre = 150_000 * SCALE
+    n_ops = 20_000 * SCALE
+    for wname, (lk, up) in WORKLOADS.items():
+        for rd_pct in (0, 5, 10):
+            rd = rd_pct / 100.0
+            for strat in STRATEGIES:
+                tree = standard_tree(strat, universe=U)
+                preload(tree, n_pre, U)
+                mix = WorkloadMix(lookup=lk, update=max(0.0, up - rd),
+                                  range_delete=rd, range_delete_len=128,
+                                  universe=U)
+                res = run_workload(tree, n_ops, mix, seed=rd_pct)
+                emit(f"fig9/{wname}/rd{rd_pct}/{strat}",
+                     1e6 / max(res.ops_per_sec, 1e-9),
+                     f"modeled_ops_s={res.modeled_ops_per_sec():.0f} "
+                     f"ops_s={res.ops_per_sec:.0f} "
+                     f"lookup_io={res.io_per_op('lookup'):.3f} "
+                     f"rdel_io={res.io_per_op('range_delete'):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Shared benchmark harness: preloaded trees, timed runs, CSV rows.
+
+Every benchmark maps to one paper table/figure (see DESIGN.md §8) and
+emits ``name,us_per_call,derived`` rows; ``derived`` carries the paper's
+headline metric for that artifact (I/O per op, normalized throughput,
+FPR, ...).  REPRO_BENCH_SCALE=full enlarges workloads ~10x.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.baselines import WorkloadMix, make_tree, run_workload
+
+SCALE = 10 if os.environ.get("REPRO_BENCH_SCALE") == "full" else 1
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def preload(tree, n: int, universe: int, seed: int = 0) -> None:
+    rng = np.random.default_rng(seed)
+    step = 8192
+    for _ in range(0, n, step):
+        keys = rng.integers(0, universe, size=step).astype(np.uint64)
+        tree.put_batch(keys, keys * np.uint64(31) + np.uint64(7))
+
+
+def standard_tree(strategy: str, universe: int = 1 << 22, **kw):
+    return make_tree(strategy, buffer_capacity=4096, size_ratio=10,
+                     universe=universe, **kw)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks (CPU: jnp oracle path timed; the Pallas kernels
+execute in interpret mode on this container, so wall numbers here
+characterize the REFERENCE path — kernel correctness is covered by
+tests/test_kernels.py and on-TPU wall time comes from the roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.eve import BloomBits, fold64to32
+from repro.kernels.bloom.ref import bloom_probe_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.interval.ref import interval_query_ref
+from repro.kernels.ssd.ref import ssd_chunked_ref
+
+from .harness import emit
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # Bloom probe: 64k keys, 1M-bit filter.
+    bb = BloomBits(1 << 20, 6)
+    keys = jnp.asarray(fold64to32(
+        rng.integers(0, 1 << 62, size=65536).astype(np.uint64)))
+    words = jnp.asarray(bb.words)
+    f = jax.jit(lambda k, w: bloom_probe_ref(
+        k, w, m_bits=bb.m_bits, seeds=tuple(int(s) for s in bb.seeds)))
+    emit("kernels/bloom_probe_64k", _time(f, keys, words),
+         "per_key_ns=" + f"{_time(f, keys, words) * 1e3 / 65536:.1f}")
+
+    # Interval query: 64k queries vs 100k disjoint areas.
+    n = 100_000
+    los = np.sort(rng.choice(1 << 30, size=2 * n, replace=False)
+                  .astype(np.uint32))
+    lo, hi = jnp.asarray(los[0::2]), jnp.asarray(los[1::2])
+    smin = jnp.zeros(n, jnp.uint32)
+    smax = jnp.asarray(rng.integers(1, 1 << 20, size=n).astype(np.uint32))
+    qk = jnp.asarray(rng.integers(0, 1 << 30, size=65536).astype(np.uint32))
+    qs = jnp.asarray(rng.integers(0, 1 << 20, size=65536).astype(np.uint32))
+    g = jax.jit(interval_query_ref)
+    emit("kernels/interval_query_64k_vs_100k", _time(g, qk, qs, lo, hi,
+                                                     smin, smax),
+         f"per_query_ns={_time(g, qk, qs, lo, hi, smin, smax) * 1e3 / 65536:.1f}")
+
+    # Flash attention (ref path): B1 S1024 H8 D64.
+    q = jnp.asarray(rng.standard_normal((1, 1024, 8, 64)), jnp.float32)
+    h = jax.jit(lambda a: attention_ref(a, a, a, causal=True))
+    emit("kernels/attention_1k_ref", _time(h, q, n=3), "path=jnp_ref")
+
+    # SSD chunked scan: B1 S2048 H8 P64 N64.
+    x = jnp.asarray(rng.standard_normal((1, 2048, 8, 64)), jnp.float32)
+    dt = jnp.asarray(rng.random((1, 2048, 8)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random(8) - 0.1, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((1, 2048, 64)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((1, 2048, 64)), jnp.float32)
+    s = jax.jit(lambda *a: ssd_chunked_ref(*a, chunk=128))
+    emit("kernels/ssd_2k_ref", _time(s, x, dt, A, B, C, n=3),
+         "path=jnp_ref")
+
+
+if __name__ == "__main__":
+    run()

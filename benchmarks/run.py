@@ -1,0 +1,52 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig9,table2]``
+prints ``name,us_per_call,derived`` CSV rows (also saved to
+benchmarks/results.csv).  REPRO_BENCH_SCALE=full for ~10x workloads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (fig9_throughput, fig10_range_length, fig11_sizes,
+               fig13_eve_fpr, fig13_index, kernels_bench,
+               table2_complexity, table3_range_lookup)
+from .harness import ROWS
+
+MODULES = {
+    "fig9": fig9_throughput,
+    "fig10": fig10_range_length,
+    "fig11": fig11_sizes,
+    "table2": table2_complexity,
+    "fig13_index": fig13_index,
+    "fig13_eve": fig13_eve_fpr,
+    "table345": table3_range_lookup,
+    "kernels": kernels_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    picks = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in picks:
+        mod = MODULES[name]
+        print(f"# --- {name} ---", flush=True)
+        t1 = time.time()
+        mod.run()
+        print(f"# {name} done in {time.time() - t1:.1f}s", flush=True)
+    with open("benchmarks/results.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in ROWS:
+            f.write(f"{r[0]},{r[1]:.3f},{r[2]}\n")
+    print(f"# total {time.time() - t0:.1f}s, {len(ROWS)} rows")
+
+
+if __name__ == "__main__":
+    main()

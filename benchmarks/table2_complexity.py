@@ -1,0 +1,53 @@
+"""Table 2 validation: point-lookup I/O complexity vs #range deletes Q.
+
+The paper's core claim: LRR lookups cost O(Q * k/B + L*phi + L) — LINEAR
+in Q — while GLORAN costs O(log^2(Q/F)) for obsolete keys, O(eps*log^2)
+for valid keys, and O(phi*log(N/F)) for absent keys (never touching the
+index).  We sweep Q and report measured I/O per lookup for the three key
+classes V (valid), N (non-existent), O (obsoleted).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .harness import SCALE, emit, preload, standard_tree
+
+U = 1 << 22
+
+
+def run():
+    n_pre = 200_000 * SCALE
+    rng = np.random.default_rng(0)
+    for q in (1_000, 10_000, 50_000):
+        for strat in ("lrr", "gloran"):
+            tree = standard_tree(strat, universe=U)
+            preload(tree, n_pre, U)
+            # Issue Q range deletes of length 64 over the lower half of
+            # the key space; upper half stays valid.
+            half = U // 2
+            los = rng.integers(0, half - 64, size=q).astype(np.uint64)
+            for lo in los.tolist():
+                tree.range_delete(lo, lo + 64)
+            tree.flush()
+
+            def probe(keys, cls):
+                r0 = tree.io.reads
+                found, _ = tree.get_batch(keys)
+                per = (tree.io.reads - r0) / len(keys)
+                emit(f"table2/q{q}/{strat}/lookup_{cls}", 0.0,
+                     f"io_per_lookup={per:.4f} found={found.mean():.2f}")
+
+            # V: keys in the untouched upper half that exist.
+            upper = rng.integers(half, U, size=4000).astype(np.uint64)
+            fu, _ = tree.get_batch(upper)
+            if fu.any():
+                probe(upper[fu][:1500], "V")
+            # N: absent keys (above the universe used for preload).
+            probe(rng.integers(U, U * 2, size=1500).astype(np.uint64), "N")
+            # O: keys inside deleted ranges (mostly obsolete/absent).
+            probe((los[:1500] + 32).astype(np.uint64), "O")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Table 3: throughput with range lookups in the mix (normalized to
+Decomp), plus Tables 4-5: YCSB-style Zipfian workloads and db_bench-style
+uniform mixes (10% of updates replaced by range deletes)."""
+
+from __future__ import annotations
+
+from .harness import SCALE, WorkloadMix, emit, preload, run_workload, \
+    standard_tree
+
+STRATEGIES = ("decomp", "scan_delete", "lookup_delete", "lrr", "gloran")
+U = 1 << 21
+
+
+def _sweep(tag: str, mixes: dict, n_pre: int, n_ops: int,
+           distribution: str = "uniform"):
+    for mname, mix in mixes.items():
+        base = None
+        for strat in STRATEGIES:
+            tree = standard_tree(strat, universe=U)
+            preload(tree, n_pre, U)
+            mix2 = WorkloadMix(**{**mix.__dict__,
+                                  "distribution": distribution})
+            res = run_workload(tree, n_ops, mix2, seed=3)
+            m = res.modeled_ops_per_sec()
+            if base is None:
+                base = m
+            emit(f"{tag}/{mname}/{strat}",
+                 1e6 / max(res.ops_per_sec, 1e-9),
+                 f"norm_tput={m / base:.2f}x "
+                 f"modeled_ops_s={m:.0f} ops_s={res.ops_per_sec:.0f}")
+
+
+def run():
+    n_pre, n_ops = 120_000 * SCALE, 15_000 * SCALE
+    # Table 3: balanced + range lookups at 2% / 10%.
+    _sweep("table3", {
+        f"rl{p}": WorkloadMix(lookup=0.5 - p / 100, update=0.45,
+                              range_delete=0.05, range_lookup=p / 100,
+                              range_lookup_len=100, universe=U)
+        for p in (2, 10)}, n_pre, n_ops)
+    # Table 4: YCSB-ish Zipfian.
+    _sweep("table4_ycsb", {
+        "point_l": WorkloadMix(lookup=0.9, update=0.0, range_delete=0.01,
+                               universe=U),
+        "balance": WorkloadMix(lookup=0.5, update=0.45, range_delete=0.05,
+                               universe=U),
+        "update": WorkloadMix(lookup=0.1, update=0.81, range_delete=0.09,
+                              universe=U),
+        "range_l": WorkloadMix(lookup=0.0, update=0.72, range_delete=0.08,
+                               range_lookup=0.2, universe=U),
+    }, n_pre, n_ops, distribution="zipfian")
+    # Table 5: db_bench-ish uniform mixes, rd = 10% of updates.
+    _sweep("table5_dbbench", {
+        f"lk{p}": WorkloadMix(lookup=p / 100, update=0.9 * (1 - p / 100),
+                              range_delete=0.1 * (1 - p / 100), universe=U)
+        for p in (10, 50, 90)}, n_pre, n_ops)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Serving example: batched decode with a GLORAN session registry.
+
+A small LM serves batched requests while per-session state records live in
+the LSM KV store; tenant/expiry churn issues range deletes.  Compares
+registry lookup I/O under GLORAN vs RocksDB-style range tombstones (LRR).
+
+    PYTHONPATH=src python examples/serve_kv_sessions.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.models import Transformer
+from repro.runtime import ServeLoop, SessionRegistry
+
+model = Transformer(smoke(get_config("chatglm3-6b")))
+rng = np.random.default_rng(0)
+B = 4
+
+for strategy in ("lrr", "gloran"):
+    reg = SessionRegistry(strategy=strategy)
+    # A fleet's worth of sessions; most expire in ranges (tenant churn).
+    for sid in range(5000):
+        reg.register(sid, np.arange(4), np.arange(4) + sid)
+    for lo in range(0, 4000, 100):
+        reg.expire_range(lo, lo + 60)
+    reg.tree.flush()
+
+    live = np.asarray([4100, 4200, 4300, 4400], dtype=np.uint64)
+    loop = ServeLoop(model, batch=B, max_len=64, registry=reg)
+    prompts = rng.integers(0, model.cfg.vocab, size=(B, 8)).astype(np.int32)
+    out = loop.run(prompts, steps=16, session_ids=live)
+    per_lookup = loop.stats.registry_io_reads / max(
+        1, loop.stats.registry_lookups)
+    print(f"{strategy:8s}: generated {out.shape} tokens, registry "
+          f"{per_lookup:.3f} I/Os per lookup, "
+          f"{loop.stats.tokens_generated / loop.stats.wall_seconds:.0f} "
+          f"tok/s")
+
+print("serve_kv_sessions OK")

@@ -1,0 +1,187 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (v5e constants):
+
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = collective_bytes / (chips * 50e9)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the partitioned HLO text, summing operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, and multiply collectives inside while-loop bodies
+(scan-over-layers) by their trip counts, recovered from each loop
+condition's comparison constant.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_COMP_RE = re.compile(r"^\s*%?(\S+?)\s+\(.*?\)\s*->", re.M)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    """Split HLO text into {computation_name: body}.
+
+    Computation headers sit at column 0 as ``[ENTRY ]%name (params) ->``;
+    params may contain NESTED parens (tuple-typed while-loop state), so
+    the params blob is matched greedily up to the ``->``."""
+    comps: dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->", line)
+        if m and not line.startswith(" "):
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = m.group(2)
+            cur_lines = [line]
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def _while_trip_counts(hlo: str, comps: dict[str, str]) -> dict[str, int]:
+    """body_computation_name -> trip count (from the condition's compare
+    against a constant; defaults to 1 when unrecoverable)."""
+    trips: dict[str, int] = {}
+    for m in re.finditer(
+            r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?"
+            r"([\w\.\-]+)", hlo):
+        cond, body = m.group(1), m.group(2)
+        count = 1
+        cbody = comps.get(cond, "")
+        consts = re.findall(r"constant\((\d+)\)", cbody)
+        if consts:
+            count = max(int(c) for c in consts)
+        trips[body] = max(trips.get(body, 1), count)
+    return trips
+
+
+def collective_bytes(hlo: str) -> tuple[int, dict]:
+    """Total collective operand bytes (loop-aware) + per-op breakdown."""
+    comps = _split_computations(hlo)
+    trips = _while_trip_counts(hlo, comps)
+    total = 0
+    by_op: dict[str, int] = {}
+    for name, body in comps.items():
+        mult = trips.get(name, 1)
+        for m in _COLL_RE.finditer(body):
+            dtype, dims, op = m.group(1), m.group(2), m.group(3)
+            b = _shape_bytes(dtype, dims) * mult
+            total += b
+            by_op[op] = by_op.get(op, 0) + b
+    return total, by_op
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_op: dict = field(default_factory=dict)
+    model_flops: float = 0.0
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9
+    memory_per_device: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * self.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * self.ici_bw)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / max term: 1.0 == compute-bound at the roofline."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / t if t > 0 else 0.0
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste detector)."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes, "coll_bytes": self.coll_bytes,
+            "coll_by_op": self.coll_by_op, "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "memory_per_device": self.memory_per_device,
+        }
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float) -> RooflineReport:
+    # cost_analysis() on the partitioned executable reports PER-DEVICE
+    # flops/bytes; the report stores GLOBAL quantities (x chips) so the
+    # brief's term formulas (global / (chips * rate)) apply directly.
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0)) * chips
+    byts = float(ca.get("bytes accessed", 0.0)) * chips
+    try:
+        hlo = compiled.as_text()
+        coll, by_op = collective_bytes(hlo)
+        coll *= chips  # per-device operand bytes -> global
+    except Exception:
+        coll, by_op = 0, {}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+    except Exception:
+        pass
+    return RooflineReport(arch=arch, shape=shape, mesh=mesh_name,
+                          chips=chips, hlo_flops=flops, hlo_bytes=byts,
+                          coll_bytes=float(coll), coll_by_op=by_op,
+                          model_flops=model_flops, memory_per_device=mem)

@@ -1,0 +1,152 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+Layout per step:  <dir>/step_<N>/
+    manifest.json   step, mesh shape, pipeline state, rng, leaf index
+    arrays.npz      flattened param/optimizer leaves (host-gathered)
+
+Guarantees used by the train loop:
+  * atomicity — written to step_<N>.tmp then os.rename'd; a crash mid-save
+    never corrupts the latest checkpoint;
+  * async — saves run on a writer thread off the step path;
+  * keep-last-k — bounded disk;
+  * elastic restore — arrays are saved unsharded; ``restore`` re-shards
+    onto whatever mesh the new job brings up (different pod/host count).
+
+Single-process container note: on a real cluster each host writes its
+addressable shards (Orbax-style); here host-gather is the honest
+single-host equivalent and the manifest/atomicity/resume logic is the
+production part under test.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._worker = threading.Thread(target=self._drain, daemon=True)
+        self._worker.start()
+        self._error = None
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, state: dict, extra: dict | None = None,
+             blocking: bool = False) -> None:
+        """state: pytree of arrays (params/opt); extra: JSON-serializable
+        (pipeline state, rng seeds, mesh info)."""
+        # Materialize to host BEFORE queueing (donated buffers may be
+        # overwritten by the next step).
+        leaves = [(k, np.asarray(v)) for k, v in
+                  _flatten_with_paths(state)]
+        job = (step, leaves, extra or {})
+        if blocking:
+            self._write(job)
+        else:
+            self._q.put(job)
+
+    def _drain(self):
+        while True:
+            job = self._q.get()
+            try:
+                self._write(job)
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+            self._q.task_done()
+
+    def wait(self):
+        self._q.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, job):
+        step, leaves, extra = job
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        arrays = {f"a{i}": v for i, (_, v) in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "keys": [k for k, _ in leaves],
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.list_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None) -> tuple[dict, dict]:
+        """Restore into the structure of ``template``; re-shard with
+        ``shardings`` (elastic: any mesh).  Returns (state, extra)."""
+        if step is None:
+            step = self.latest_step()
+            assert step is not None, "no checkpoint found"
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+        tmpl_leaves = _flatten_with_paths(template)
+        restored = []
+        for key, tmpl in tmpl_leaves:
+            arr = by_key[key]
+            assert tuple(arr.shape) == tuple(tmpl.shape), \
+                f"{key}: {arr.shape} != {tmpl.shape}"
+            restored.append(arr.astype(tmpl.dtype))
+        treedef = jax.tree_util.tree_structure(template)
+        state = jax.tree_util.tree_unflatten(treedef, restored)
+        if shardings is not None:
+            flat_sh = treedef.flatten_up_to(shardings)
+            flat_st = treedef.flatten_up_to(state)
+            state = jax.tree_util.tree_unflatten(
+                treedef,
+                [jax.device_put(a, s) for a, s in zip(flat_st, flat_sh)])
+        return state, manifest["extra"]

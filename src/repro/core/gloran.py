@@ -1,0 +1,122 @@
+"""GLORAN facade: global range-delete manager = LSM-DRtree + EVE + GC.
+
+This is what an LSM key-value store (``repro.lsm.tree.LSMTree``) plugs in as
+its range-delete strategy, and what the serving runtime uses for session
+KV-state expiry.  Sequence numbers are supplied by the host store; the GC
+floor is advanced by bottom-level compaction watermarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .eve import EVE, RAEConfig
+from .iostats import IOStats
+from .lsm_drtree import LSMDRTree, LSMDRTreeConfig, LSMRTree
+
+
+@dataclass
+class GloranConfig:
+    index: LSMDRTreeConfig = field(default_factory=LSMDRTreeConfig)
+    eve: RAEConfig | None = field(default_factory=RAEConfig)
+    use_eve: bool = True
+    use_drtree: bool = True  # False => GLORAN0 (LSM-Rtree levels)
+
+
+class GloranIndex:
+    """Global range-record index with the EVE predictive shortcut."""
+
+    def __init__(self, config: GloranConfig | None = None,
+                 io: IOStats | None = None):
+        self.config = config or GloranConfig()
+        self.io = io if io is not None else IOStats(
+            block_size=self.config.index.block_size)
+        if self.config.use_drtree:
+            self.index = LSMDRTree(self.config.index, io=self.io)
+        else:
+            self.index = LSMRTree(self.config.index, io=self.io)
+        self.eve = EVE(self.config.eve) if self.config.use_eve else None
+        self.gc_floor = 0
+        self.num_range_deletes = 0
+
+    # ------------------------------------------------------------- writes
+    def range_delete(self, lo: int, hi: int, seq: int) -> None:
+        """Record a range delete over keys [lo, hi) issued at ``seq``.
+
+        Its effective area is [lo, hi) x [0, seq): it invalidates ALL
+        strictly older live entries (even ones below the GC floor — the
+        floor only proves *already-applied* records' low coverage vacuous;
+        a fresh delete must still kill old survivors).  GC later trims the
+        floor up once this record has been applied by a bottom compaction.
+        """
+        assert lo < hi, "empty range"
+        self.index.insert(lo, hi, smax=seq, smin=0)
+        if self.eve is not None:
+            self.eve.insert_range(lo, hi, seq)
+        self.num_range_deletes += 1
+
+    # ------------------------------------------------------------- reads
+    def is_deleted(self, key: int, entry_seq: int) -> bool:
+        """Is the entry (key, entry_seq) invalidated by a range delete?
+
+        EVE fast path first: a negative estimator probe proves validity
+        without touching the on-disk index (no false negatives).
+        """
+        if self.eve is not None and not self.eve.maybe_deleted(key,
+                                                               entry_seq):
+            return False
+        return self.index.covers(key, entry_seq)
+
+    def is_deleted_batch(self, keys: np.ndarray,
+                         entry_seqs: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.uint64)
+        entry_seqs = np.asarray(entry_seqs, dtype=np.uint64)
+        if self.eve is not None:
+            maybe = self.eve.maybe_deleted_batch(keys, entry_seqs)
+        else:
+            maybe = np.ones(len(keys), dtype=bool)
+        out = np.zeros(len(keys), dtype=bool)
+        if maybe.any():
+            if hasattr(self.index, "covers_batch"):
+                out[maybe] = self.index.covers_batch(keys[maybe],
+                                                     entry_seqs[maybe])
+            else:
+                out[maybe] = [self.index.covers(int(k), int(s))
+                              for k, s in zip(keys[maybe],
+                                              entry_seqs[maybe])]
+        return out
+
+    # ----------------------------------------------------------------- gc
+    def on_bottom_compaction(self, watermark: int) -> None:
+        """Event-listener hook (§4.4): a bottommost-level data compaction
+        finished; every obsolete entry with seq < watermark is purged, so
+        records/RAEs living entirely below it are vacuous."""
+        if watermark <= self.gc_floor:
+            return
+        self.gc_floor = watermark
+        if hasattr(self.index, "gc"):
+            self.index.gc(watermark)
+        if self.eve is not None:
+            self.eve.gc(watermark)
+
+    # ---------------------------------------------------------------- misc
+    @property
+    def memory_bytes(self) -> int:
+        eve = self.eve.nbytes if self.eve is not None else 0
+        buf = self.index.buffer.size * 2 * self.config.index.key_size
+        return eve + buf
+
+    @property
+    def disk_bytes(self) -> int:
+        return getattr(self.index, "nbytes", 0)
+
+    def stats(self) -> dict:
+        return {
+            "range_deletes": self.num_range_deletes,
+            "records": self.index.num_records,
+            "gc_floor": self.gc_floor,
+            "memory_bytes": self.memory_bytes,
+            "io": self.io.snapshot(),
+        }

@@ -1,0 +1,233 @@
+"""LSM-DRtree: the global range-record index (paper §4.2).
+
+An in-memory R-tree write buffer absorbs range-record inserts; a flush
+disjointizes the buffer into a DR-tree pushed to level 1; level overflows
+trigger streaming two-way merge compactions (``merge_disjoint``) into the
+next level.  Level capacities grow by the size ratio T', so with buffer
+capacity F' the structure holds Q records in O(log_T'(Q/F')) levels —
+giving Lemma 4.3's update cost and Lemma 4.4's point-probe cost.
+
+``LSMRTree`` is the GLORAN0 baseline (Fig. 13a): identical level scheduling
+but levels keep *raw* overlapping areas in bulk-loaded R-trees, so probes
+pay overlap-induced multi-node descents.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .areas import AreaSet, UKEY
+from .disjointize import disjointize, merge_disjoint
+from .drtree import DRTree
+from .iostats import IOStats
+from .rtree import RTree
+
+
+@dataclass
+class LSMDRTreeConfig:
+    buffer_capacity: int = 8192  # F' records (4 MB / 512 B in the paper)
+    size_ratio: int = 10  # T'
+    key_size: int = 16  # k bytes (record = 2k)
+    block_size: int = 4096  # B bytes
+    fanout: int | None = None  # D; defaults to B // 2k
+
+
+class LSMDRTree:
+    """Global index over effective areas with LSM-style levels of DR-trees."""
+
+    def __init__(self, config: LSMDRTreeConfig | None = None,
+                 io: IOStats | None = None):
+        self.config = config or LSMDRTreeConfig()
+        self.io = io if io is not None else IOStats(
+            block_size=self.config.block_size)
+        self.buffer = RTree()
+        self.levels: list[DRTree | None] = []
+        self.records_inserted = 0
+
+    # ------------------------------------------------------------ helpers
+    def _level_capacity(self, i: int) -> int:
+        # Level i (0-based on-disk) holds up to F' * T'^(i+1) records.
+        return self.config.buffer_capacity * self.config.size_ratio**(i + 1)
+
+    def _make_drtree(self, areas: AreaSet) -> DRTree:
+        return DRTree(areas, key_size=self.config.key_size,
+                      block_size=self.config.block_size,
+                      fanout=self.config.fanout)
+
+    # ------------------------------------------------------------- insert
+    def insert(self, lo: int, hi: int, smax: int, smin: int = 0) -> None:
+        """Insert the effective area of one range delete."""
+        assert lo < hi and smin < smax
+        self.buffer.insert(lo, hi, smin, smax)
+        self.records_inserted += 1
+        if self.buffer.size >= self.config.buffer_capacity:
+            self.flush()
+
+    def flush(self) -> None:
+        if self.buffer.size == 0:
+            return
+        areas = disjointize(self.buffer.extract_all())
+        self.buffer.clear()
+        tree = self._make_drtree(areas)
+        self.io.write_sequential(len(areas) * 2 * self.config.key_size,
+                                 tag="index_flush")
+        self._push(0, tree)
+
+    def _push(self, i: int, tree: DRTree) -> None:
+        while len(self.levels) <= i:
+            self.levels.append(None)
+        if self.levels[i] is None:
+            self.levels[i] = tree
+        else:
+            merged = merge_disjoint(self.levels[i].areas, tree.areas)
+            self.io.read_blocks(self.levels[i].scan_io() + tree.scan_io(),
+                                tag="index_compaction")
+            self.io.write_sequential(len(merged) * 2 * self.config.key_size,
+                                     tag="index_compaction")
+            self.levels[i] = self._make_drtree(merged)
+        if len(self.levels[i].areas) > self._level_capacity(i):
+            overflow = self.levels[i]
+            self.levels[i] = None
+            self._push(i + 1, overflow)
+
+    # -------------------------------------------------------------- query
+    def covers(self, key: int, seq: int) -> bool:
+        """Has (key, seq) been invalidated by any range delete?"""
+        if self.buffer.size and self.buffer.covers(key, seq):
+            return True
+        for lvl in self.levels:
+            if lvl is not None and lvl.query(key, seq, io=self.io):
+                return True
+        return False
+
+    def covers_batch(self, keys: np.ndarray, seqs: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.uint64)
+        seqs = np.asarray(seqs, dtype=np.uint64)
+        out = np.zeros(len(keys), dtype=bool)
+        if self.buffer.size:
+            buf = self.buffer.extract_all()
+            out |= buf.covers_batch_bruteforce(keys, seqs)
+        for lvl in self.levels:
+            if lvl is not None:
+                todo = ~out
+                if not todo.any():
+                    break
+                out[todo] = lvl.query_batch(keys[todo], seqs[todo],
+                                            io=self.io)
+        return out
+
+    def probe_cost(self) -> int:
+        """Worst-case I/Os for one point probe (Lemma 4.4 / Eq. 2)."""
+        return sum(l.probe_cost() for l in self.levels if l is not None)
+
+    # ----------------------------------------------------------------- gc
+    def gc(self, watermark: int) -> int:
+        """Purge records vacuous below the bottom-compaction watermark.
+
+        Per §4.4 GC is confined to the bottommost level, where outdated
+        records concentrate.  Returns the number of records dropped.
+        """
+        for i in range(len(self.levels) - 1, -1, -1):
+            lvl = self.levels[i]
+            if lvl is not None:
+                before = len(lvl)
+                self.io.read_blocks(lvl.scan_io(), tag="index_gc")
+                newlvl = lvl.gc(watermark)
+                self.io.write_sequential(
+                    len(newlvl) * 2 * self.config.key_size, tag="index_gc")
+                self.levels[i] = newlvl
+                return before - len(newlvl)
+        return 0
+
+    # ---------------------------------------------------------------- misc
+    @property
+    def num_records(self) -> int:
+        return self.buffer.size + sum(
+            len(l) for l in self.levels if l is not None)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(l.nbytes for l in self.levels if l is not None) + \
+            self.buffer.size * 2 * self.config.key_size
+
+    def all_areas(self) -> AreaSet:
+        out = self.buffer.extract_all()
+        for lvl in self.levels:
+            if lvl is not None:
+                out = out.concat(lvl.areas)
+        return out
+
+
+class LSMRTree:
+    """GLORAN0 baseline: LSM of plain R-trees (no disjointization).
+
+    Same buffering/level scheduling as LSMDRTree, but each on-disk level is
+    a bulk-loaded R-tree over raw areas; probes are charged one I/O per
+    visited node, exposing the overlap pathology of Fig. 13a.
+    """
+
+    def __init__(self, config: LSMDRTreeConfig | None = None,
+                 io: IOStats | None = None):
+        self.config = config or LSMDRTreeConfig()
+        self.io = io if io is not None else IOStats(
+            block_size=self.config.block_size)
+        self.buffer = RTree()
+        self.levels: list[tuple[RTree, AreaSet] | None] = []
+
+    def _level_capacity(self, i: int) -> int:
+        return self.config.buffer_capacity * self.config.size_ratio**(i + 1)
+
+    def insert(self, lo: int, hi: int, smax: int, smin: int = 0) -> None:
+        self.buffer.insert(lo, hi, smin, smax)
+        if self.buffer.size >= self.config.buffer_capacity:
+            self.flush()
+
+    def flush(self) -> None:
+        if self.buffer.size == 0:
+            return
+        areas = self.buffer.extract_all().sorted_by_lo()
+        self.buffer.clear()
+        self.io.write_sequential(len(areas) * 2 * self.config.key_size,
+                                 tag="index_flush")
+        self._push(0, areas)
+
+    def _push(self, i: int, areas: AreaSet) -> None:
+        while len(self.levels) <= i:
+            self.levels.append(None)
+        if self.levels[i] is None:
+            self.levels[i] = (RTree.bulk_load(areas), areas)
+        else:
+            merged = self.levels[i][1].concat(areas).sorted_by_lo()
+            self.io.read_sequential(
+                (len(self.levels[i][1]) + len(areas)) * 2 *
+                self.config.key_size, tag="index_compaction")
+            self.io.write_sequential(len(merged) * 2 * self.config.key_size,
+                                     tag="index_compaction")
+            self.levels[i] = (RTree.bulk_load(merged), merged)
+        if len(self.levels[i][1]) > self._level_capacity(i):
+            _, overflow = self.levels[i]
+            self.levels[i] = None
+            self._push(i + 1, overflow)
+
+    def covers(self, key: int, seq: int) -> bool:
+        if self.buffer.size and self.buffer.covers(key, seq):
+            return True
+        hit = False
+        for lvl in self.levels:
+            if lvl is None:
+                continue
+            tree, _ = lvl
+            v0 = tree.node_visits
+            if tree.covers(key, seq):
+                hit = True
+            self.io.read_blocks(tree.node_visits - v0, tag="rtree_probe")
+            if hit:
+                break
+        return hit
+
+    @property
+    def num_records(self) -> int:
+        return self.buffer.size + sum(
+            len(l[1]) for l in self.levels if l is not None)

@@ -1,0 +1,4 @@
+from .pipeline import PipelineConfig, TokenPipeline
+from .versioned_store import VersionedSampleStore
+
+__all__ = ["PipelineConfig", "TokenPipeline", "VersionedSampleStore"]

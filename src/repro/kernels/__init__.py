@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package follows the kernel.py (pl.pallas_call + BlockSpec) /
+ops.py (jit'd public wrapper) / ref.py (pure-jnp oracle) layout and is
+validated in interpret mode against the oracle across shape/dtype sweeps.
+
+  bloom            batched Bloom-filter probe (SSTable filters, RAE/EVE)
+  interval         batched point-stab query over disjoint DR-tree levels
+  flash_attention  blocked causal/windowed GQA attention (serving prefill)
+  ssd              Mamba2 state-space-duality chunked scan
+"""
+
+from .bloom.ops import bloom_probe
+from .interval.ops import interval_query
+from .flash_attention.ops import flash_attention
+from .ssd.ops import ssd_chunked_scan
+
+__all__ = ["bloom_probe", "interval_query", "flash_attention",
+           "ssd_chunked_scan"]

@@ -1,0 +1,3 @@
+from .ops import bloom_probe
+
+__all__ = ["bloom_probe"]

@@ -1,0 +1,73 @@
+"""Pallas kernel: batched Bloom-filter probe.
+
+Design (TPU adaptation of the paper's per-level filter probes): the bit
+array stays resident in VMEM — LSM filters at 10 bits/key are ~1.2 MB per
+million keys, comfortably inside the ~16 MB VMEM of a v5e core — and the
+query stream is tiled over the grid in (rows x 128)-lane blocks so the VPU
+processes 128 probes per lane step.  All hashing is 32-bit (murmur3-style
+finalizer), bit-identical to the host-side ``repro.core.eve.BloomBits``.
+
+Larger filters are chunked at the ops layer (each chunk owns a disjoint
+word range, so per-chunk probes AND together).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _mix32(x: jnp.ndarray, seed) -> jnp.ndarray:
+    """murmur3-style finalizer on uint32 (matches core.eve.mix32)."""
+    x = x.astype(jnp.uint32) ^ jnp.uint32(seed)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _bloom_probe_kernel(keys_ref, words_ref, out_ref, *, m_bits: int,
+                        seeds: tuple[int, ...]):
+    """One grid step: probe a (rows, 128) tile of folded uint32 keys."""
+    keys = keys_ref[...]  # (rows, LANES) uint32
+    words = words_ref[...].reshape(-1)  # full filter in VMEM
+    hit = jnp.ones(keys.shape, dtype=jnp.bool_)
+    for seed in seeds:  # n_hashes is small + static: unrolled
+        pos = _mix32(keys, seed) % jnp.uint32(m_bits)
+        w = jnp.take(words, (pos >> jnp.uint32(5)).astype(jnp.int32), axis=0)
+        bit = (w >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        hit = hit & (bit == jnp.uint32(1))
+    out_ref[...] = hit.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits", "seeds", "block_rows",
+                                             "interpret"))
+def bloom_probe_pallas(keys32: jnp.ndarray, words: jnp.ndarray, *,
+                       m_bits: int, seeds: tuple[int, ...],
+                       block_rows: int = 8,
+                       interpret: bool = True) -> jnp.ndarray:
+    """keys32: (n_rows, 128) uint32 folded keys; words: (n_words,) uint32.
+
+    Returns int32 {0,1} of shape (n_rows, 128)."""
+    n_rows = keys32.shape[0]
+    assert keys32.shape[1] == LANES
+    assert n_rows % block_rows == 0
+    grid = (n_rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_bloom_probe_kernel, m_bits=m_bits, seeds=seeds),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((words.shape[0],), lambda i: (0,)),  # whole filter
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(keys32, words)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Bloom probe kernel (identical 32-bit math)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mix32_ref(x: jnp.ndarray, seed) -> jnp.ndarray:
+    x = x.astype(jnp.uint32) ^ jnp.uint32(seed)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def bloom_probe_ref(keys32: jnp.ndarray, words: jnp.ndarray, *, m_bits: int,
+                    seeds: tuple[int, ...]) -> jnp.ndarray:
+    """keys32: any-shape uint32; words: (n_words,) uint32 -> int32 {0,1}."""
+    hit = jnp.ones(keys32.shape, dtype=jnp.bool_)
+    for seed in seeds:
+        pos = mix32_ref(keys32, seed) % jnp.uint32(m_bits)
+        w = jnp.take(words, (pos >> jnp.uint32(5)).astype(jnp.int32), axis=0)
+        bit = (w >> (pos & jnp.uint32(31))) & jnp.uint32(1)
+        hit = hit & (bit == jnp.uint32(1))
+    return hit.astype(jnp.int32)

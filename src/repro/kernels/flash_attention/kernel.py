@@ -1,0 +1,117 @@
+"""Pallas kernel: blocked causal/sliding-window GQA flash attention.
+
+Online-softmax formulation over a (batch x heads, q-blocks, kv-blocks) grid
+with running (m, l, acc) VMEM scratch; the kv-block axis is the innermost
+"arbitrary" axis so scratch carries across it.  MXU-aligned tiles
+(block_q x head_dim and block_k x head_dim, multiples of 128 lanes) keep
+the working set in VMEM.  GQA is expressed in the K/V BlockSpec index maps
+(kv head = q head // group) so KV is never materialized per q-head.
+
+Used by the serving/prefill path; training uses the differentiable jnp
+reference (ref.py) — the kernel targets the inference hot spot.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  q_len: int, kv_len: int, block_q: int, block_k: int,
+                  n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = (k_pos < kv_len) & (q_pos < q_len)
+    if causal:
+        # Queries are the LAST q_len positions of the kv stream (supports
+        # prefill continuation); align query absolute position.
+        mask &= k_pos <= (q_pos + (kv_len - q_len))
+    if window is not None:
+        mask &= k_pos > (q_pos + (kv_len - q_len) - window)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]  # (block_q, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "q_len", "kv_len",
+                     "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, scale: float, causal: bool,
+                           window: int | None, q_len: int, kv_len: int,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q: (B, Hq, Sq, D), k/v: (B, Hkv, Skv, D); Sq/Skv padded to blocks."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert sq % block_q == 0 and skv % block_k == 0
+    nq, nk = sq // block_q, skv // block_k
+    grid = (b * hq, nq, nk)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, d),
+                          lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, block_k, d),
+        lambda bh, qi, ki: (bh // hq, (bh % hq) // group, ki, 0))
+    out_spec = pl.BlockSpec((1, 1, block_q, d),
+                            lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0))
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, q_len=q_len, kv_len=kv_len,
+                          block_q=block_q, block_k=block_k, n_kv_blocks=nk),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""Public wrapper: flash attention with framework (B, S, H, D) layout.
+
+Pads sequence lengths to block multiples (mask-safe), transposes to the
+kernel's (B, H, S, D) layout, and picks interpret mode off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, scale=None, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if scale is None:
+        scale = float(d) ** -0.5
+    block_q = min(block_q, max(8, sq))
+    block_k = min(block_k, max(8, skv))
+    pq = -sq % block_q
+    pk = -skv % block_k
+    qt = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    o = flash_attention_pallas(qt, kt, vt, scale=scale, causal=causal,
+                               window=window, q_len=sq, kv_len=skv,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return o.transpose(0, 2, 1, 3)[:, :sq]

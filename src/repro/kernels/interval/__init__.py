@@ -1,0 +1,3 @@
+from .ops import interval_query
+
+__all__ = ["interval_query"]

@@ -1,0 +1,81 @@
+"""Pallas kernel: batched point-stab query over a disjoint DR-tree level.
+
+This is the TPU-native form of the DR-tree descent (paper §4.2): because
+disjointized areas are key-sorted and non-overlapping, "which node covers
+key v" is a single lower-bound binary search — no multi-child descent.  The
+level's four arrays (lo, hi, smin, smax) are VMEM-resident; a grid of
+(rows x 128) query tiles runs a fixed-depth vectorized binary search on the
+VPU, then one gather + rectangle test per query.
+
+Levels larger than VMEM are chunked at the ops layer: chunks own disjoint
+key ranges, so per-chunk verdicts OR together.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _interval_kernel(keys_ref, seqs_ref, lo_ref, hi_ref, smin_ref, smax_ref,
+                     out_ref, *, n: int, steps: int):
+    keys = keys_ref[...]  # (rows, LANES) uint32
+    seqs = seqs_ref[...]
+    lo = lo_ref[...].reshape(-1)
+    hi = hi_ref[...].reshape(-1)
+    smin = smin_ref[...].reshape(-1)
+    smax = smax_ref[...].reshape(-1)
+
+    # Vectorized lower-bound: idx = (# of lo[j] <= key) - 1, via fixed-depth
+    # binary search (steps = ceil(log2(n)) iterations, data-independent).
+    left = jnp.zeros(keys.shape, dtype=jnp.int32)
+    right = jnp.full(keys.shape, n, dtype=jnp.int32)
+
+    def body(_, lr):
+        left, right = lr
+        active = left < right  # fixed-depth loop: freeze once converged
+        mid = (left + right) // 2
+        midc = jnp.clip(mid, 0, n - 1)
+        go_right = jnp.take(lo, midc, axis=0) <= keys
+        left = jnp.where(active & go_right, mid + 1, left)
+        right = jnp.where(active & ~go_right, mid, right)
+        return left, right
+
+    left, right = jax.lax.fori_loop(0, steps, body, (left, right))
+    idx = left - 1
+    idxc = jnp.maximum(idx, 0)
+    covered = (idx >= 0) \
+        & (keys < jnp.take(hi, idxc, axis=0)) \
+        & (jnp.take(smin, idxc, axis=0) <= seqs) \
+        & (seqs < jnp.take(smax, idxc, axis=0))
+    out_ref[...] = covered.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def interval_query_pallas(keys32, seqs32, lo, hi, smin, smax, *,
+                          block_rows: int = 8,
+                          interpret: bool = True) -> jnp.ndarray:
+    """keys32/seqs32: (rows, 128) uint32; level arrays: (n,) uint32.
+
+    Returns int32 {0,1} (rows, 128): is (key, seq) covered by the level?"""
+    n = lo.shape[0]
+    rows = keys32.shape[0]
+    assert rows % block_rows == 0
+    steps = max(1, math.ceil(math.log2(n + 1)) + 1)  # converge + safety
+    grid = (rows // block_rows,)
+    full = lambda arr: pl.BlockSpec((arr.shape[0],), lambda i: (0,))
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_interval_kernel, n=n, steps=steps),
+        grid=grid,
+        in_specs=[tile, tile, full(lo), full(hi), full(smin), full(smax)],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(keys32, seqs32, lo, hi, smin, smax)

@@ -1,0 +1,50 @@
+"""Public jit'd wrapper: batched DR-tree point-stab queries.
+
+Pads the query stream to (rows x 128) tiles and chunks VMEM-oversized
+levels by key range (disjointness makes per-chunk ORs exact).  Sentinel
+padding (lo=hi=0) never covers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import LANES, interval_query_pallas
+
+MAX_AREAS_PER_CALL = 1 << 20  # 4 arrays x 4 B x 1 Mi = 16 MB VMEM budget/4
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def interval_query(keys32, seqs32, lo, hi, smin, smax, *,
+                   block_rows: int = 8, interpret: bool | None = None):
+    """Returns bool (n,): is (key, seq) covered by the disjoint level?"""
+    if interpret is None:
+        interpret = _default_interpret()
+    keys32 = jnp.asarray(keys32, jnp.uint32)
+    seqs32 = jnp.asarray(seqs32, jnp.uint32)
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    smin = jnp.asarray(smin, jnp.uint32)
+    smax = jnp.asarray(smax, jnp.uint32)
+
+    n = keys32.shape[0]
+    tile = block_rows * LANES
+    n_pad = -n % tile
+    keys_p = jnp.pad(keys32, (0, n_pad)).reshape(-1, LANES)
+    seqs_p = jnp.pad(seqs32, (0, n_pad)).reshape(-1, LANES)
+
+    m = lo.shape[0]
+    if m == 0:
+        return jnp.zeros((n,), dtype=bool)
+    out = jnp.zeros(keys_p.shape, dtype=jnp.int32)
+    for a0 in range(0, m, MAX_AREAS_PER_CALL):
+        a1 = min(m, a0 + MAX_AREAS_PER_CALL)
+        out = out | interval_query_pallas(
+            keys_p, seqs_p, lo[a0:a1], hi[a0:a1], smin[a0:a1], smax[a0:a1],
+            block_rows=block_rows, interpret=interpret)
+    return out.reshape(-1)[:n].astype(bool)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the interval point-stab kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def interval_query_ref(keys32, seqs32, lo, hi, smin, smax) -> jnp.ndarray:
+    """keys/seqs any-shape uint32; level arrays (n,) uint32 sorted by lo,
+    key-disjoint.  Returns int32 {0,1}."""
+    idx = jnp.searchsorted(lo, keys32.reshape(-1), side="right").astype(
+        jnp.int32) - 1
+    idx = idx.reshape(keys32.shape)
+    idxc = jnp.maximum(idx, 0)
+    covered = (idx >= 0) \
+        & (keys32 < jnp.take(hi, idxc, axis=0)) \
+        & (jnp.take(smin, idxc, axis=0) <= seqs32) \
+        & (seqs32 < jnp.take(smax, idxc, axis=0))
+    return covered.astype(jnp.int32)

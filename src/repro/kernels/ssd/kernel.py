@@ -1,0 +1,68 @@
+"""Pallas kernel: Mamba2 SSD intra-chunk dual form + chunk states.
+
+TPU adaptation of the SSD algorithm: the quadratic *intra-chunk* piece is
+an MXU-friendly (chunk x chunk) matmul per (batch x head, chunk) grid cell
+with all operands VMEM-resident; the strictly-sequential inter-chunk state
+recurrence stays outside the kernel (a tiny lax.scan over nc steps in
+ops.py) — recomputing it inside the kernel would serialize the grid.
+
+Grid: (B*H, n_chunks).  Per cell:
+  y_intra = ((C B^T) .* L) @ (x * dt),  L[t,u] = exp(dac_t - dac_u) (u<=t)
+  state   = (B .* (exp(dac_last - dac) * dt))^T @ x        (N x P)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dac_ref, dt_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0, 0].astype(jnp.float32)  # (q, p)
+    dac = dac_ref[0, 0].astype(jnp.float32)  # (q, 1)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (q, 1)
+    Bc = b_ref[0, 0].astype(jnp.float32)  # (q, n)
+    Cc = c_ref[0, 0].astype(jnp.float32)  # (q, n)
+    q = x.shape[0]
+
+    CB = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (q,q)
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(col <= row, jnp.exp(dac - dac.reshape(1, q)), 0.0)
+    M = CB * L * dt.reshape(1, q)
+    y_ref[0, 0] = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(dac[q - 1, 0] - dac)  # (q,1)
+    Bw = Bc * (decay_to_end * dt)
+    st_ref[0, 0] = jax.lax.dot_general(
+        Bw, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunks_pallas(xq, dac, dtq, Bq, Cq, *, interpret: bool = True):
+    """xq: (BH, nc, q, p); dac/dtq: (BH, nc, q, 1); Bq/Cq: (BH, nc, q, n).
+
+    Returns (y_intra (BH, nc, q, p) f32, states (BH, nc, n, p) f32)."""
+    bh, nc, q, p = xq.shape
+    n = Bq.shape[-1]
+    grid = (bh, nc)
+    blk = lambda shp: pl.BlockSpec((1, 1) + shp, lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[blk((q, p)), blk((q, 1)), blk((q, 1)), blk((q, n)),
+                  blk((q, n))],
+        out_specs=[blk((q, p)), blk((n, p))],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xq, dac, dtq, Bq, Cq)

@@ -1,0 +1,75 @@
+"""Public wrapper: chunked SSD scan (Pallas intra-chunk + host-level
+inter-chunk recurrence).
+
+``use_kernel=False`` (default off-TPU training) routes everything through
+the differentiable jnp reference; ``use_kernel=True`` uses the Pallas
+kernel for the intra-chunk dual form and states.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunks_pallas
+from .ref import ssd_chunked_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_chunked_scan(x, dt, A, B, C, *, chunk: int = 64,
+                     use_kernel: bool = False, interpret: bool | None = None,
+                     return_final: bool = False):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B/C: (b, s, n).
+
+    Returns y: (b, s, h, p), plus the final recurrent state when
+    ``return_final=True``."""
+    if not use_kernel:
+        return ssd_chunked_ref(x, dt, A, B, C, chunk=chunk,
+                               return_final=return_final)
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    da = (dt * A[None, None, :]).astype(jnp.float32)
+    dac = jnp.cumsum(da.reshape(b, nc, chunk, h), axis=2)
+
+    # Pack to (B*H, nc, q, ...) for the kernel grid.
+    xq = x.reshape(b, nc, chunk, h, p).transpose(0, 3, 1, 2, 4) \
+        .reshape(b * h, nc, chunk, p)
+    dacq = dac.transpose(0, 3, 1, 2).reshape(b * h, nc, chunk, 1)
+    dtq = dt.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2) \
+        .reshape(b * h, nc, chunk, 1).astype(jnp.float32)
+    Bq = jnp.broadcast_to(
+        B.reshape(b, 1, nc, chunk, n),
+        (b, h, nc, chunk, n)).reshape(b * h, nc, chunk, n)
+    Cq = jnp.broadcast_to(
+        C.reshape(b, 1, nc, chunk, n),
+        (b, h, nc, chunk, n)).reshape(b * h, nc, chunk, n)
+
+    y_intra, states = ssd_chunks_pallas(xq, dacq, dtq, Bq, Cq,
+                                        interpret=interpret)
+
+    chunk_decay = jnp.exp(dacq[:, :, -1, 0])  # (BH, nc)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp  # (BH, n, p), (BH,)
+        hnew = hprev * dec[:, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b * h, n, p), dtype=jnp.float32)
+    h_final, hprevs = jax.lax.scan(scan_fn, h0,
+                                   (states.transpose(1, 0, 2, 3),
+                                    chunk_decay.transpose(1, 0)))
+    hprevs = hprevs.transpose(1, 0, 2, 3)  # (BH, nc, n, p)
+    Cw = Cq * jnp.exp(dacq)  # (BH, nc, q, n)
+    y_inter = jnp.einsum("kcqn,kcnp->kcqp", Cw, hprevs)
+    y = (y_intra + y_inter).reshape(b, h, nc, chunk, p) \
+        .transpose(0, 2, 3, 1, 4).reshape(b, s, h, p).astype(x.dtype)
+    if return_final:
+        return y, h_final.reshape(b, h, n, p)
+    return y

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) scan.
+
+Semantics (Mamba2, arXiv:2405.21060): per head h with state size N,
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T     (N x P state)
+    y_t = C_t @ h_t
+``ssd_ref`` materializes the quadratic dual form (for tests);
+``ssd_chunked_ref`` is the chunked linear-time algorithm in plain jnp —
+the differentiable training path and the oracle for the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Quadratic reference.
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,) (negative); B, C: (b, s, n).
+    Returns y: (b, s, h, p).  (Single B/C group shared across heads.)
+    """
+    b, s, h, p = x.shape
+    da = dt * A[None, None, :]  # (b,s,h)
+    cum = jnp.cumsum(da, axis=1)
+    # G[t, u] = exp(cum_t - cum_u) for u <= t.
+    G = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (b,t,u,h)
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    CB = jnp.einsum("btn,bun->btu", C.astype(jnp.float32),
+                    B.astype(jnp.float32))
+    M = jnp.where(causal[None, :, :, None], G * CB[:, :, :, None], 0.0)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    y = jnp.einsum("btuh,buhp->bthp", M, xdt)
+    return y.astype(x.dtype)
+
+
+def _chunk_intra(x, dac, dt, Bc, Cc):
+    """Intra-chunk dual form + end-of-chunk state (jnp; mirrors kernel.py).
+
+    x: (q, p); dac: (q,) inclusive cumsum of dt*A within chunk; dt: (q,);
+    Bc, Cc: (q, n).  Returns (y_intra (q, p), state (n, p)).
+    """
+    CB = Cc.astype(jnp.float32) @ Bc.astype(jnp.float32).T  # (q,q)
+    L = jnp.exp(dac[:, None] - dac[None, :])
+    L = jnp.where(jnp.tril(jnp.ones(L.shape, dtype=bool)), L, 0.0)
+    M = CB * L * dt[None, :]
+    y_intra = M @ x.astype(jnp.float32)
+    decay_to_end = jnp.exp(dac[-1] - dac)
+    state = (Bc.astype(jnp.float32) * (decay_to_end * dt)[:, None]).T \
+        @ x.astype(jnp.float32)
+    return y_intra, state
+
+
+def ssd_chunked_ref(x, dt, A, B, C, *, chunk: int = 64,
+                    return_final: bool = False):
+    """Linear-time chunked SSD in jnp (differentiable; oracle for kernel).
+
+    Shapes as in ``ssd_ref``; s must be a multiple of ``chunk``.
+    ``return_final=True`` also returns the end-of-sequence recurrent state
+    h (b, h, n, p) — needed by prefill to seed decode.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    da = (dt * A[None, None, :]).astype(jnp.float32)
+    dac = jnp.cumsum(da.reshape(b, nc, chunk, h), axis=2)  # (b,nc,q,h)
+
+    xq = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtq = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bq = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cq = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    # Intra-chunk dual form, vectorized over (b, nc, h) with einsums.
+    CB = jnp.einsum("bctn,bcun->bctu", Cq, Bq)  # (b,nc,q,q)
+    L = jnp.exp(dac[:, :, :, None, :] - dac[:, :, None, :, :])  # (b,nc,t,u,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    M = jnp.where(causal[None, None, :, :, None],
+                  CB[..., None] * L * dtq[:, :, None, :, :], 0.0)
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", M, xq)
+    # End-of-chunk states.
+    decay_to_end = jnp.exp(dac[:, :, -1:, :] - dac)  # (b,nc,q,h)
+    states = jnp.einsum("bcun,bcuh,bcuhp->bchnp", Bq, decay_to_end * dtq, xq)
+    chunk_decay = jnp.exp(dac[:, :, -1, :])  # (b, nc, h)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp  # (b,h,n,p), (b,h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, p), dtype=jnp.float32)
+    h_final, hprevs = jax.lax.scan(
+        scan_fn, h0, (states.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)  # (b,nc,h,n,p)
+    # Inter-chunk contribution: y_t += (C_t * exp(dac_t)) @ h_prev_chunk.
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cq, jnp.exp(dac), hprevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p).astype(x.dtype)
+    if return_final:
+        return y, h_final
+    return y

@@ -1,0 +1,1 @@
+"""Launchers: mesh factories, dry-run, train/serve CLIs."""

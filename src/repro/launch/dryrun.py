@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count at first init.
+# This is dry-run only — smoke tests and benchmarks see the 1 real device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (shardings
+compose, collectives partition, compile succeeds), prints
+``memory_analysis()`` (does it fit 16 GB/chip?) and ``cost_analysis()``
+(FLOPs/bytes for §Roofline), and records loop-aware collective bytes.
+
+cost_analysis() counts while-loop (scan-over-layers) bodies ONCE, so we
+additionally compile a single-layer unit step and combine:
+    total ~= step(once-counted) + (L-1) * layer_unit
+Collective bytes are loop-aware directly (trip counts parsed from HLO).
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k \
+      --mesh multi --out results/
+  python -m repro.launch.dryrun --all --mesh both --out results/
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..analysis.roofline import analyze_compiled, collective_bytes
+from ..configs import ARCHS, SHAPES, get_config
+from ..models import Transformer, tree_abstract, tree_shardings
+from ..models.params import ParamSpec, is_spec
+from ..launch.mesh import make_production_mesh
+from ..launch.steps import (adjust_rules_for_shape, batch_shardings,
+                            input_specs, make_decode_step,
+                            make_prefill_step, make_train_step,
+                            opt_state_shardings, serve_cache_len)
+from ..optim.optimizer import OptimizerConfig, make_optimizer
+
+
+def planned_cells():
+    """All 40 (arch x shape) cells; long_500k runs only for sub-quadratic
+    archs (skips recorded, per DESIGN.md)."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            skip = sname == "long_500k" and not cfg.sub_quadratic
+            yield arch, sname, skip
+
+
+def _drop_layer_dim(specs, mesh, rules):
+    """Single-layer slices of stacked specs (for the layer-unit compile)."""
+    def f(s: ParamSpec):
+        if s.axes and s.axes[0] in ("layers", "groups"):
+            return ParamSpec(s.shape[1:], s.axes[1:], s.init, s.scale)
+        return s
+    return jax.tree.map(f, specs, is_leaf=is_spec)
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    return 2.0 * n * shape.tokens
+
+
+def lower_cell(arch: str, shape_name: str, mesh_name: str,
+               microbatch: int = 1, donate: bool = True,
+               variants: tuple[str, ...] = ()) -> dict:
+    """variants: §Perf hillclimb knobs —
+      mb<k>     gradient accumulation over k microbatches
+      ctxcache  context-parallel decode KV cache (seq dim over 'model')
+      seqpar    sequence-parallel residual stream (seq over 'model')
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Transformer(cfg)
+    specs = model.param_specs()
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    adjust_rules_for_shape(model, shape, mesh)
+    for v in variants:
+        if v.startswith("mb"):
+            microbatch = int(v[2:])
+        elif v == "ctxcache":
+            prev = model.rules.rules.get("cache_seq") or ()
+            model.rules = model.rules.with_overrides(
+                cache_dim=None,
+                cache_seq=tuple(dict.fromkeys(("model",) + tuple(prev))))
+        elif v == "seqpar":
+            model.rules = model.rules.with_overrides(act_seq="model")
+        elif v == "cponly":
+            # Small-d archs: TP psums of (tokens x d) dwarf the compute.
+            # Drop tensor parallelism entirely; use the 'model' axis for
+            # context parallelism (seq-sharded residual; attention
+            # all-gathers only the tiny kv=1 heads).
+            model.rules = model.rules.with_overrides(
+                act_seq="model", q_heads=None, head_dim=None,
+                kv_heads=None, mlp=None)
+        elif v == "moedecode":
+            # Decode: capacity is tiny (C ~ 40), so sharding it is useless
+            # and XLA all-gathers expert weights instead; shard the
+            # dispatch buffer's d_model dim to match the weights' FSDP
+            # axis -> contraction goes local + KB-scale psum.
+            model.rules = model.rules.with_overrides(
+                expert_in=None, expert_d="data")
+        elif v == "nofsdp":
+            # Serving: keep weights resident (model-sharded only); ZeRO
+            # re-gathers per step are pure waste without a backward pass.
+            model.rules = model.rules.with_overrides(embed_fsdp=None)
+        else:
+            raise ValueError(f"unknown variant {v}")
+    rules = model.rules
+    params_abs = tree_abstract(specs, jnp.dtype(cfg.dtype))
+    params_sh = tree_shardings(specs, mesh, rules)
+    batch_abs = input_specs(cfg, shape, model, microbatch=microbatch)
+    batch_sh = batch_shardings(cfg, shape, mesh, rules, model)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig(name=cfg.optimizer)
+        init_fn, _ = make_optimizer(opt_cfg)
+        opt_abs = jax.eval_shape(init_fn, params_abs)
+        opt_sh = opt_state_shardings(cfg.optimizer, specs, mesh, rules)
+        step = make_train_step(model, opt_cfg, microbatch=microbatch)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(params_sh, opt_sh, batch_sh),
+                donate_argnums=(0, 1) if donate else ()).lower(
+                    params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(model)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=(params_sh, batch_sh)) \
+                .lower(params_abs, batch_abs)
+    else:  # decode
+        _, ring = serve_cache_len(cfg, shape)
+        step = make_decode_step(model, ring=ring)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, batch_sh["token"],
+                              batch_sh["cache"], batch_sh["pos"]),
+                donate_argnums=(2,) if donate else ()).lower(
+                    params_abs, batch_abs["token"], batch_abs["cache"],
+                    jax.ShapeDtypeStruct((), jnp.int32))
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rep = analyze_compiled(compiled, arch=arch, shape=shape_name,
+                           mesh_name=mesh_name, chips=chips,
+                           model_flops=model_flops(cfg, shape))
+
+    # ---- layer-unit compile: recover scan-body flops/bytes x L ----------
+    unit = _layer_unit(model, cfg, shape, mesh, rules, specs)
+    if unit is not None:
+        u_flops, u_bytes, n_units = unit  # per-device -> global (x chips)
+        rep.hlo_flops += u_flops * chips * max(0, n_units - 1)
+        rep.hlo_bytes += u_bytes * chips * max(0, n_units - 1)
+
+    out = rep.to_dict()
+    out.update({
+        "_migrated_global": True,  # metrics are global (x chips) already
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "microbatch": microbatch,
+        "fits_16g": (out["memory_per_device"].get("temp_bytes", 0) +
+                     out["memory_per_device"].get("argument_bytes", 0))
+        < 16e9 if out["memory_per_device"] else None,
+        "params": int(cfg.n_params()),
+        "active_params": int(cfg.n_active_params()),
+    })
+    return out
+
+
+def _multi_unit(model, cfg, shape, mesh, rules, layer_specs, classes,
+                unit_fwd_for, b, s):
+    """Weighted per-window-class layer units: sum(count_w x unit_w),
+    reported as (flops, bytes, n_units=2) so the caller's x(n-1) yields
+    the weighted total minus one (approximating the once-counted body)."""
+    from ..models import tree_abstract, tree_shardings
+    total_f, total_b = 0.0, 0.0
+    lp_abs = tree_abstract(layer_specs, jnp.dtype(cfg.dtype))
+    lp_sh = tree_shardings(layer_specs, mesh, rules)
+    x_abs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    x_sh = jax.sharding.NamedSharding(
+        mesh, rules.spec(("batch", "act_seq", "embed"),
+                         tuple(mesh.axis_names)))
+    for wval, count in classes:
+        fwd = unit_fwd_for(wval)
+        if shape.kind == "train":
+            def unit(lp, x, _f=fwd):
+                def g(lp_, x_):
+                    return _f(lp_, x_).astype(jnp.float32).sum()
+                return jax.grad(g, argnums=(0, 1))(lp, x)
+        else:
+            unit = fwd
+        try:
+            with mesh:
+                c = jax.jit(unit, in_shardings=(lp_sh, x_sh)).lower(
+                    lp_abs, x_abs).compile()
+            ca = c.cost_analysis() or {}
+            total_f += float(ca.get("flops", 0.0)) * count
+            total_b += float(ca.get("bytes accessed", 0.0)) * count
+        except Exception:
+            traceback.print_exc()
+            return None
+    # Caller adds unit x (n_units - 1); encode the weighted sum directly.
+    return total_f, total_b, 2
+
+
+def _layer_unit(model, cfg, shape, mesh, rules, specs):
+    """Compile one scanned-layer body (fwd, or fwd+bwd for train) and
+    return (flops, bytes, n_units) per device."""
+    try:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            s = 1
+        x_abs = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+        x_sh = jax.sharding.NamedSharding(
+            mesh, rules.spec(("batch", None, "embed"),
+                             tuple(mesh.axis_names)))
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            layer_specs = _drop_layer_dim(specs["layers"], mesh, rules)
+            # Heterogeneous stacks (gemma3 local:global): weight units per
+            # distinct window class so banded local layers are costed
+            # correctly, not as full attention.
+            import numpy as _np
+            wins = _np.asarray(model._window_vector())
+            classes = [(int(w), int((wins == w).sum()))
+                       for w in _np.unique(wins)]
+            n_units = cfg.n_layers
+
+            def unit_fwd_for(wval):
+                def unit_fwd(lp, x):
+                    import jax.numpy as jnp2
+                    pos = jnp2.broadcast_to(
+                        jnp2.arange(s, dtype=jnp2.int32)[None], (b, s))
+                    out, _ = model._block_dense(x, lp, jnp2.int32(wval),
+                                                pos, None, None)
+                    return out
+                return unit_fwd
+
+            if len(classes) > 1:
+                return _multi_unit(model, cfg, shape, mesh, rules,
+                                   layer_specs, classes, unit_fwd_for, b, s)
+            unit_fwd = unit_fwd_for(classes[0][0])
+        elif cfg.family == "ssm":
+            layer_specs = _drop_layer_dim(specs["layers"]["mamba"], mesh,
+                                          rules)
+            n_units = cfg.n_layers
+
+            def unit_fwd(lp, x):
+                out, _ = model._block_mamba(x, lp, None)
+                return out
+        else:  # hybrid: one group (inner scan of `per` mamba + shared attn)
+            per = cfg.hybrid_attn_every or 6
+            n_units = cfg.n_layers // per
+            gspecs = _drop_layer_dim(specs["groups"], mesh, rules)
+            shared = {"shared_attn": specs["shared_attn"],
+                      "shared_mlp": specs["shared_mlp"]}
+            layer_specs = {"group": gspecs, **shared}
+
+            def unit_fwd(lp, x):
+                import jax.numpy as jnp2
+                pos = jnp2.broadcast_to(
+                    jnp2.arange(s, dtype=jnp2.int32)[None], (b, s))
+                fake_params = {"groups": jax.tree.map(
+                    lambda a: a[None], lp["group"]),
+                    "shared_attn": lp["shared_attn"],
+                    "shared_mlp": lp["shared_mlp"]}
+                return model._hybrid_forward(fake_params, x, pos)
+
+        lp_abs = tree_abstract(layer_specs, jnp.dtype(cfg.dtype))
+        lp_sh = tree_shardings(layer_specs, mesh, rules)
+
+        if shape.kind == "train":
+            def unit(lp, x):
+                def f(lp_, x_):
+                    return unit_fwd(lp_, x_).astype(jnp.float32).sum()
+                return jax.grad(f, argnums=(0, 1))(lp, x)
+        else:
+            unit = unit_fwd
+
+        with mesh:
+            c = jax.jit(unit, in_shardings=(lp_sh, x_sh)).lower(
+                lp_abs, x_abs).compile()
+        ca = c.cost_analysis() or {}
+        return (float(ca.get("flops", 0.0)),
+                float(ca.get("bytes accessed", 0.0)), n_units)
+    except Exception:
+        traceback.print_exc()
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--variants", default="",
+                    help="comma list: mb8,ctxcache,seqpar")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    variants = tuple(v for v in args.variants.split(",") if v)
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a, s, skip in planned_cells() if not skip]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh_name in meshes:
+            tag = f"{arch}__{shape}__{mesh_name}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip cached] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                res = lower_cell(arch, shape, mesh_name,
+                                 microbatch=args.microbatch,
+                                 variants=variants)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"  ok: compile={res['compile_s']}s "
+                      f"flops={res['hlo_flops']:.3e} "
+                      f"coll={res['coll_bytes']:.3e} "
+                      f"bottleneck={res['bottleneck']} "
+                      f"mem={res['memory_per_device']}", flush=True)
+            except Exception as e:
+                failures += 1
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"  FAILED: {type(e).__name__}: {e}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh factories.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (critical — smoke tests must see 1 CPU device
+while the dry-run forces 512 host-platform devices via XLA_FLAGS before
+any jax import).
+
+Target: TPU v5e pods.  Single pod = 16x16 = 256 chips, axes
+('data', 'model'); multi-pod = 2 x 16 x 16 = 512 chips with a leading
+'pod' axis (data-parallel across pods over DCI, model/data parallel over
+ICI within a pod).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# v5e hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

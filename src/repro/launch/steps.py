@@ -1,0 +1,202 @@
+"""Step builders: train_step / prefill_step / decode_step + input_specs.
+
+These are the functions the dry-run lowers and the runtime drivers jit.
+``input_specs`` returns weak-type-correct ShapeDtypeStructs for every model
+input (no device allocation); ``*_shardings`` return the matching
+NamedSharding trees for pjit in_shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Transformer, tree_abstract, tree_shardings
+from ..models.layers import cross_entropy_loss
+from ..models.moe import moe_aux_loss
+from ..models.params import ParamSpec, is_spec
+from ..models.sharding import ShardingRules
+from ..optim.optimizer import OptimizerConfig, make_optimizer
+
+
+# --------------------------------------------------------------- geometry
+def serve_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> tuple[int, bool]:
+    """(cache_len, ring): SWA archs decode against a ring buffer of the
+    window; hybrids switch their shared attention to a 4096 ring for
+    long_500k (DESIGN.md)."""
+    if cfg.family == "hybrid":
+        if shape.name == "long_500k":
+            return 4096, True
+        return shape.seq_len, False
+    if cfg.window is not None and cfg.local_global is None:
+        return min(cfg.window, shape.seq_len), True
+    return shape.seq_len, False
+
+
+def adjust_rules_for_shape(model: Transformer, shape: ShapeConfig,
+                           mesh) -> None:
+    """Divisibility-aware rule adjustment for a concrete (shape x mesh).
+
+    long_500k has global_batch=1: batch can't shard over ('pod','data').
+    Fall back to replicated batch and recover parallelism from the cache
+    sequence dim (context-parallel decode) — 'data' is otherwise idle in
+    a batch-1 decode."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = model.rules.rules.get("batch") or ()
+    shards = 1
+    for a in batch_axes:
+        shards *= sizes.get(a, 1)
+    if shards > 1 and shape.global_batch % shards != 0:
+        cache_seq = model.rules.rules.get("cache_seq") or ()
+        new_seq = tuple(a for a in ("data",) + tuple(cache_seq)
+                        if a in sizes)
+        model.rules = model.rules.with_overrides(
+            batch=None, cache_batch=None, cache_seq=new_seq or None)
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Transformer,
+                microbatch: int = 1) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.stub_frontend is not None:
+            data = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+        else:
+            data = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        data["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return data
+    if shape.kind == "prefill":
+        if cfg.stub_frontend is not None:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a seq_len cache.
+    cache_len, _ = serve_cache_len(cfg, shape)
+    cache = jax.eval_shape(lambda: model.init_cache(b, cache_len))
+    if cfg.stub_frontend is not None:
+        tok = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+    else:
+        tok = jax.ShapeDtypeStruct((b, 1), i32)
+    return {"token": tok, "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    rules: ShardingRules, model: Transformer):
+    """NamedShardings matching input_specs."""
+    ax = tuple(mesh.axis_names)
+    bspec = rules.spec(("batch", None), ax)
+    bspec3 = rules.spec(("batch", None, "embed"), ax)
+    if shape.kind == "train":
+        out = {"labels": NamedSharding(mesh, bspec)}
+        if cfg.stub_frontend is not None:
+            out["embeds"] = NamedSharding(mesh, bspec3)
+        else:
+            out["tokens"] = NamedSharding(mesh, bspec)
+        return out
+    if shape.kind == "prefill":
+        if cfg.stub_frontend is not None:
+            return {"embeds": NamedSharding(mesh, bspec3)}
+        return {"tokens": NamedSharding(mesh, bspec)}
+    cache_axes = model.cache_logical_axes()
+    cache_sh = jax.tree.map(
+        lambda axes: NamedSharding(mesh, rules.spec(axes, ax)), cache_axes,
+        is_leaf=lambda x: isinstance(x, tuple))
+    if cfg.stub_frontend is not None:
+        tok = NamedSharding(mesh, rules.spec(("batch", None, "embed"), ax))
+    else:
+        tok = NamedSharding(mesh, rules.spec(("batch", None), ax))
+    return {"token": tok, "cache": cache_sh,
+            "pos": NamedSharding(mesh, PartitionSpec())}
+
+
+def opt_state_shardings(opt_name: str, specs, mesh, rules: ShardingRules):
+    """Optimizer state shards like its parameter (reduced dims dropped)."""
+    ax = tuple(mesh.axis_names)
+
+    scalar = NamedSharding(mesh, PartitionSpec())
+    if opt_name == "adamw":
+        like_param = jax.tree.map(
+            lambda s: NamedSharding(mesh, rules.spec(s.axes, ax)), specs,
+            is_leaf=is_spec)
+        return {"mu": like_param, "nu": like_param, "step": scalar}
+
+    def factored(s: ParamSpec):
+        if len(s.shape) >= 2:
+            return {"vr": NamedSharding(mesh, rules.spec(s.axes[:-1], ax)),
+                    "vc": NamedSharding(
+                        mesh, rules.spec(s.axes[:-2] + s.axes[-1:], ax))}
+        return {"v": NamedSharding(mesh, rules.spec(s.axes, ax))}
+
+    return {"f": jax.tree.map(factored, specs, is_leaf=is_spec),
+            "step": scalar}
+
+
+# ------------------------------------------------------------------ steps
+def make_train_step(model: Transformer, opt_cfg: OptimizerConfig,
+                    microbatch: int = 1, aux_loss_weight: float = 0.01):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``microbatch > 1`` accumulates gradients over sequential
+    microbatches (deferred psum: one optimizer update per global batch)."""
+    _, update_fn = make_optimizer(opt_cfg)
+    cfg = model.cfg
+
+    def loss_fn(params, data):
+        kw = {}
+        if "tokens" in data:
+            kw["tokens"] = data["tokens"]
+        else:
+            kw["embeds"] = data["embeds"]
+        logits = model.forward_train(params, **kw)
+        loss = cross_entropy_loss(logits, data["labels"])
+        return loss
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatch, b // microbatch) +
+                                 x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, data):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, data)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+            loss = lsum / microbatch
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, info = update_fn(params, grads, opt_state)
+        metrics = {"loss": loss, **info}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Transformer):
+    def prefill_step(params, batch):
+        return model.prefill(params, **batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: Transformer, ring: bool = False):
+    def decode_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos, ring=ring)
+
+    return decode_step

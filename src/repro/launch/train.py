@@ -1,0 +1,53 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+        --smoke --steps 50
+
+--smoke runs the reduced same-family config on local devices (CPU);
+without it the FULL config is used (requires real accelerators; on this
+container use repro.launch.dryrun to exercise full configs).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from ..configs import ARCHS, get_config, smoke as smoke_cfg
+from ..data import PipelineConfig, TokenPipeline
+from ..models import Transformer, count_params
+from ..optim import OptimizerConfig
+from ..runtime import TrainLoopConfig, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_cfg(cfg)
+    model = Transformer(cfg)
+    print(f"{cfg.name} [{cfg.family}] "
+          f"params={count_params(model.param_specs()) / 1e6:.1f}M")
+    pipe = TokenPipeline(PipelineConfig(
+        vocab=cfg.vocab, global_batch=args.global_batch, seq_len=args.seq,
+        seed=0, emit_embeddings=cfg.stub_frontend is not None,
+        d_model=cfg.d_model))
+    res = run_training(model, pipe, TrainLoopConfig(
+        total_steps=args.steps, checkpoint_every=max(10, args.steps // 4),
+        checkpoint_dir=args.ckpt_dir, microbatch=args.microbatch),
+        opt_cfg=OptimizerConfig(name=cfg.optimizer, warmup_steps=10,
+                                decay_steps=args.steps))
+    print(f"done: steps={res.final_step} loss {res.losses[0]:.3f} -> "
+          f"{res.losses[-1]:.3f} retries={res.retries}")
+
+
+if __name__ == "__main__":
+    main()

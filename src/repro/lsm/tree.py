@@ -1,0 +1,426 @@
+"""LSM-tree key-value store with pluggable range-delete strategies.
+
+Leveling configuration (one sorted run per level, size ratio T), following
+§2: memtable of F entries, Bloom filter + fence pointers per run, point
+tombstones, compaction cascades.  Range deletes dispatch to one of:
+
+  decomp        tombstone per key in the range (the naive Delete loop)
+  lookup_delete Get each key, Delete the ones that exist
+  scan_delete   iterator scan, Delete found keys
+  lrr           local range records: per-level range-tombstone blocks
+                (RocksDB DeleteRange; the paper's SOTA baseline)
+  gloran        this paper: global LSM-DRtree index + EVE
+
+Every operation charges simulated block I/Os to ``self.io`` per the paper's
+cost model; benchmarks report those counts alongside wall time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.gloran import GloranConfig, GloranIndex
+from ..core.iostats import IOStats
+from .format import LSMConfig, PUT, TOMBSTONE
+from .sstable import RangeTombstoneBlock, SSTable, build_sstable
+
+STRATEGIES = ("decomp", "lookup_delete", "scan_delete", "lrr", "gloran")
+
+
+class LSMTree:
+    def __init__(self, config: LSMConfig | None = None,
+                 strategy: str = "gloran",
+                 gloran_config: GloranConfig | None = None):
+        assert strategy in STRATEGIES, strategy
+        self.config = config or LSMConfig()
+        self.strategy = strategy
+        self.io = IOStats(block_size=self.config.block_size)
+        self.mem: dict[int, tuple[int, int, int]] = {}  # key->(seq,type,val)
+        self.mem_rts: list[tuple[int, int, int]] = []  # LRR buffer
+        self.levels: list[SSTable | None] = []
+        self.level_rts: list[RangeTombstoneBlock] = []
+        self.seq = 0
+        self.gloran = None
+        if strategy == "gloran":
+            self.gloran = GloranIndex(gloran_config, io=self.io)
+        self._sstable_seed = 0
+
+    # ------------------------------------------------------------ helpers
+    def _next_seq(self) -> int:
+        self.seq += 1
+        return self.seq
+
+    def _next_seqs(self, n: int) -> np.ndarray:
+        out = np.arange(self.seq + 1, self.seq + n + 1, dtype=np.uint64)
+        self.seq += n
+        return out
+
+    def _mem_put(self, key: int, seq: int, typ: int, val: int) -> None:
+        self.mem[int(key)] = (int(seq), int(typ), int(val))
+        if len(self.mem) >= self.config.buffer_capacity:
+            self.flush()
+
+    # ------------------------------------------------------------- writes
+    def put(self, key: int, val: int) -> None:
+        self._mem_put(key, self._next_seq(), int(PUT), val)
+
+    def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        keys = np.asarray(keys, dtype=np.uint64)
+        vals = np.asarray(vals, dtype=np.uint64)
+        seqs = self._next_seqs(len(keys))
+        for k, s, v in zip(keys.tolist(), seqs.tolist(), vals.tolist()):
+            self.mem[k] = (s, 0, v)
+            if len(self.mem) >= self.config.buffer_capacity:
+                self.flush()
+
+    def delete(self, key: int) -> None:
+        self._mem_put(key, self._next_seq(), int(TOMBSTONE), 0)
+
+    def delete_batch(self, keys: np.ndarray) -> None:
+        keys = np.asarray(keys, dtype=np.uint64)
+        seqs = self._next_seqs(len(keys))
+        for k, s in zip(keys.tolist(), seqs.tolist()):
+            self.mem[k] = (s, 1, 0)
+            if len(self.mem) >= self.config.buffer_capacity:
+                self.flush()
+
+    def range_delete(self, lo: int, hi: int) -> None:
+        """Delete all keys in [lo, hi) using the configured strategy."""
+        assert lo < hi
+        if self.strategy == "decomp":
+            self.delete_batch(np.arange(lo, hi, dtype=np.uint64))
+        elif self.strategy == "lookup_delete":
+            keys = np.arange(lo, hi, dtype=np.uint64)
+            found, _ = self.get_batch(keys)
+            if found.any():
+                self.delete_batch(keys[found])
+        elif self.strategy == "scan_delete":
+            keys, _ = self.range_scan(lo, hi)
+            if len(keys):
+                self.delete_batch(keys)
+        elif self.strategy == "lrr":
+            self.mem_rts.append((int(lo), int(hi), self._next_seq()))
+            # Range tombstones are memtable entries (RocksDB): they count
+            # toward the buffer and flush with it.
+            if len(self.mem) + len(self.mem_rts) >= \
+                    self.config.buffer_capacity:
+                self.flush()
+        else:  # gloran
+            self.gloran.range_delete(lo, hi, self._next_seq())
+
+    # -------------------------------------------------------------- reads
+    def _mem_rt_cover(self, key: int) -> int:
+        cov = 0
+        for lo, hi, s in self.mem_rts:
+            if lo <= key < hi:
+                cov = max(cov, s)
+        return cov
+
+    def get(self, key: int):
+        """Point lookup; returns value or None."""
+        key = int(key)
+        rt_max = self._mem_rt_cover(key) if self.strategy == "lrr" else 0
+        hit = self.mem.get(key)
+        if hit is not None:
+            seq, typ, val = hit
+            return self._resolve(key, seq, typ, val, rt_max)
+        for i, lvl in enumerate(self.levels):
+            if self.strategy == "lrr" and i < len(self.level_rts) and \
+                    len(self.level_rts[i]):
+                rt_max = max(rt_max, self.level_rts[i].probe(key, self.io))
+            if lvl is None or len(lvl) == 0:
+                continue
+            found, seq, typ, val = lvl.get(key, self.io)
+            if found:
+                return self._resolve(key, seq, typ, val, rt_max)
+        return None
+
+    def _resolve(self, key, seq, typ, val, rt_max):
+        if typ == TOMBSTONE:
+            return None
+        if self.strategy == "lrr" and rt_max > seq:
+            return None
+        if self.strategy == "gloran" and self.gloran.is_deleted(key, seq):
+            return None
+        return val
+
+    def get_batch(self, keys: np.ndarray):
+        """Vectorized point lookups. Returns (found_mask, values)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        n = len(keys)
+        resolved = np.zeros(n, dtype=bool)
+        out_found = np.zeros(n, dtype=bool)
+        out_vals = np.zeros(n, dtype=np.uint64)
+        out_seqs = np.zeros(n, dtype=np.uint64)
+        rt_max = np.zeros(n, dtype=np.uint64)
+
+        if self.strategy == "lrr" and self.mem_rts:
+            for lo, hi, s in self.mem_rts:
+                m = (keys >= lo) & (keys < hi)
+                rt_max[m] = np.maximum(rt_max[m], np.uint64(s))
+
+        # Memtable.
+        for j, k in enumerate(keys.tolist()):
+            hit = self.mem.get(k)
+            if hit is not None:
+                resolved[j] = True
+                out_found[j] = hit[1] == 0
+                out_seqs[j] = hit[0]
+                out_vals[j] = hit[2]
+
+        for i, lvl in enumerate(self.levels):
+            todo = ~resolved
+            if not todo.any():
+                break
+            if self.strategy == "lrr" and i < len(self.level_rts) and \
+                    len(self.level_rts[i]):
+                rt_max[todo] = np.maximum(
+                    rt_max[todo],
+                    self.level_rts[i].probe_batch(keys[todo], self.io))
+            if lvl is None or len(lvl) == 0:
+                continue
+            f, s, t, v = lvl.get_batch(keys[todo], self.io)
+            idx = np.flatnonzero(todo)[f]
+            resolved[idx] = True
+            out_found[idx] = t[f] == 0
+            out_seqs[idx] = s[f]
+            out_vals[idx] = v[f]
+
+        # Validity filtering.
+        if self.strategy == "lrr":
+            dead = out_found & (rt_max > out_seqs)
+            out_found &= ~dead
+        elif self.strategy == "gloran":
+            cand = out_found
+            if cand.any():
+                dead = self.gloran.is_deleted_batch(keys[cand],
+                                                    out_seqs[cand])
+                sub = np.flatnonzero(cand)[dead]
+                out_found[sub] = False
+        return out_found, out_vals
+
+    def range_scan(self, lo: int, hi: int):
+        """All live entries with lo <= key < hi. Returns (keys, vals)."""
+        lo, hi = int(lo), int(hi)
+        ks, ss, ts, vs = [], [], [], []
+        for k, (s, t, v) in self.mem.items():
+            if lo <= k < hi:
+                ks.append(k), ss.append(s), ts.append(t), vs.append(v)
+        parts = [(np.array(ks, dtype=np.uint64), np.array(ss, np.uint64),
+                  np.array(ts, np.uint8), np.array(vs, np.uint64))]
+        for lvl in self.levels:
+            if lvl is not None and len(lvl):
+                parts.append(lvl.range_slice(lo, hi, self.io))
+        keys = np.concatenate([p[0] for p in parts])
+        seqs = np.concatenate([p[1] for p in parts])
+        typs = np.concatenate([p[2] for p in parts])
+        vals = np.concatenate([p[3] for p in parts])
+        if len(keys) == 0:
+            return keys, vals
+        order = np.lexsort((seqs, keys))
+        keys, seqs, typs, vals = keys[order], seqs[order], typs[order], vals[order]
+        newest = np.ones(len(keys), dtype=bool)
+        newest[:-1] = keys[1:] != keys[:-1]
+        keys, seqs, typs, vals = (keys[newest], seqs[newest], typs[newest],
+                                  vals[newest])
+        live = typs == 0
+        if self.strategy == "lrr":
+            rt_max = np.zeros(len(keys), dtype=np.uint64)
+            for lo_, hi_, s_ in self.mem_rts:
+                m = (keys >= lo_) & (keys < hi_)
+                rt_max[m] = np.maximum(rt_max[m], np.uint64(s_))
+            for rtb in self.level_rts:
+                if len(rtb):
+                    # Iterator over the rt block: sequential stream of
+                    # tombstones with start < hi.
+                    cnt = int(np.searchsorted(rtb.starts, np.uint64(hi)))
+                    self.io.read_blocks(
+                        1 + (cnt * self.config.range_tombstone_size) //
+                        self.config.block_size, tag="rt_scan")
+                    rt_max = np.maximum(rt_max, rtb.max_covering_batch(keys))
+            live &= ~(rt_max > seqs)
+        elif self.strategy == "gloran" and len(keys):
+            # Iterators over each DR-tree level stream areas overlapping
+            # the scan range (sorted + sequential on disk).
+            idx = self.gloran.index
+            for lvl in getattr(idx, "levels", []):
+                if lvl is None:
+                    continue
+                a = lvl.areas if hasattr(lvl, "areas") else None
+                if a is None or len(a) == 0:
+                    continue
+                i0 = int(np.searchsorted(a.hi, np.uint64(lo), side="right"))
+                i1 = int(np.searchsorted(a.lo, np.uint64(hi)))
+                cnt = max(0, i1 - i0)
+                self.io.read_blocks(
+                    1 + (cnt * 2 * self.gloran.config.index.key_size) //
+                    self.config.block_size, tag="gloran_scan")
+            dead = self.gloran.is_deleted_batch(keys, seqs)
+            live &= ~dead
+        return keys[live], vals[live]
+
+    # -------------------------------------------------- flush / compaction
+    def flush(self) -> None:
+        if not self.mem and not self.mem_rts:
+            return
+        if self.mem:
+            items = np.array([(k, s, t, v)
+                              for k, (s, t, v) in self.mem.items()],
+                             dtype=np.uint64)
+            self.mem.clear()
+            self._sstable_seed += 1
+            run = build_sstable(items[:, 0], items[:, 1],
+                                items[:, 2].astype(np.uint8), items[:, 3],
+                                self.config, io=self.io,
+                                seed=self._sstable_seed)
+            self._merge_into(0, run)
+        if self.strategy == "lrr" and self.mem_rts:
+            arr = np.array(self.mem_rts, dtype=np.uint64)
+            self.mem_rts = []
+            rtb = RangeTombstoneBlock(arr[:, 0], arr[:, 1], arr[:, 2],
+                                      self.config)
+            self._ensure_rt(0)
+            self.level_rts[0] = self.level_rts[0].merge(rtb)
+            self.io.write_sequential(self.level_rts[0].nbytes, tag="rt_flush")
+        self._cascade()
+
+    def _ensure_rt(self, i: int) -> None:
+        while len(self.level_rts) <= i:
+            self.level_rts.append(RangeTombstoneBlock.empty(self.config))
+
+    def _merge_into(self, i: int, run: SSTable) -> None:
+        while len(self.levels) <= i:
+            self.levels.append(None)
+        self._ensure_rt(i)
+        if self.levels[i] is None or len(self.levels[i]) == 0:
+            self.levels[i] = run
+            return
+        dst = self.levels[i]
+        self.io.read_sequential(dst.nbytes + run.nbytes, tag="compaction")
+        self._sstable_seed += 1
+        merged = build_sstable(
+            np.concatenate([dst.keys, run.keys]),
+            np.concatenate([dst.seqs, run.seqs]),
+            np.concatenate([dst.types, run.types]),
+            np.concatenate([dst.vals, run.vals]), self.config, io=self.io,
+            seed=self._sstable_seed)
+        self.levels[i] = merged
+
+    def _is_bottom(self, i: int) -> bool:
+        return all(self.levels[j] is None or len(self.levels[j]) == 0
+                   for j in range(i + 1, len(self.levels)))
+
+    def _cascade(self) -> None:
+        i = 0
+        while i < len(self.levels):
+            lvl = self.levels[i]
+            if lvl is not None and len(lvl) > self.config.level_capacity(i):
+                self._compact(i)
+            i += 1
+
+    def _compact(self, i: int) -> None:
+        """Merge level i into level i+1 (leveling)."""
+        src = self.levels[i]
+        self.levels[i] = None
+        while len(self.levels) <= i + 1:
+            self.levels.append(None)
+        self._ensure_rt(i + 1)
+        dst = self.levels[i + 1]
+        keys = [src.keys] + ([dst.keys] if dst is not None else [])
+        seqs = [src.seqs] + ([dst.seqs] if dst is not None else [])
+        typs = [src.types] + ([dst.types] if dst is not None else [])
+        vals = [src.vals] + ([dst.vals] if dst is not None else [])
+        self.io.read_sequential(
+            src.nbytes + (dst.nbytes if dst is not None else 0),
+            tag="compaction")
+        keys = np.concatenate(keys)
+        seqs = np.concatenate(seqs)
+        typs = np.concatenate(typs)
+        vals = np.concatenate(vals)
+        # Dedup keep-newest happens in build_sstable; apply deletes first.
+        bottom = self._is_bottom(i + 1)
+        if self.strategy == "lrr":
+            rtb = self.level_rts[i].merge(self.level_rts[i + 1])
+            self.level_rts[i] = RangeTombstoneBlock.empty(self.config)
+            if len(rtb):
+                self.io.read_sequential(rtb.nbytes, tag="rt_compaction")
+                cov = rtb.max_covering_batch(keys)
+                keep = ~(cov > seqs)
+                keys, seqs, typs, vals = (keys[keep], seqs[keep], typs[keep],
+                                          vals[keep])
+            if bottom:
+                # Range tombstones expire at the bottommost level.
+                self.level_rts[i + 1] = RangeTombstoneBlock.empty(self.config)
+            else:
+                self.level_rts[i + 1] = rtb
+                self.io.write_sequential(rtb.nbytes, tag="rt_compaction")
+        elif self.strategy == "gloran" and self.gloran is not None and bottom:
+            # Stream-merge against the global index: one sequential pass.
+            idx = self.gloran.index
+            for lvl in getattr(idx, "levels", []):
+                if lvl is not None and hasattr(lvl, "scan_io"):
+                    self.io.read_blocks(lvl.scan_io(), tag="gloran_compact")
+            dead = self.gloran.is_deleted_batch(keys, seqs)
+            keep = ~dead
+            keys, seqs, typs, vals = (keys[keep], seqs[keep], typs[keep],
+                                      vals[keep])
+        self._sstable_seed += 1
+        merged = build_sstable(keys, seqs, typs, vals, self.config,
+                               io=self.io, seed=self._sstable_seed)
+        if bottom and len(merged):
+            # Point tombstones expire at the bottommost level.
+            keep = merged.types != TOMBSTONE
+            if not keep.all():
+                self._sstable_seed += 1
+                merged = build_sstable(merged.keys[keep], merged.seqs[keep],
+                                       merged.types[keep], merged.vals[keep],
+                                       self.config, io=None,
+                                       seed=self._sstable_seed)
+        self.levels[i + 1] = merged
+        if self.strategy == "gloran" and bottom:
+            # GC watermark: everything below it now lives in the bottom
+            # level and has had range deletes applied.
+            self.gloran.on_bottom_compaction(self._watermark(i + 1))
+
+    def _watermark(self, bottom_idx: int) -> int:
+        w = self.seq
+        if self.mem:
+            w = min(w, min(s for s, _, _ in self.mem.values()))
+        for j in range(bottom_idx):
+            lvl = self.levels[j]
+            if lvl is not None and len(lvl):
+                w = min(w, lvl.min_seq)
+        return w
+
+    # ---------------------------------------------------------------- misc
+    @property
+    def num_entries(self) -> int:
+        return len(self.mem) + sum(
+            len(l) for l in self.levels if l is not None)
+
+    @property
+    def disk_bytes(self) -> int:
+        data = sum(l.nbytes for l in self.levels if l is not None)
+        rt = sum(r.nbytes for r in self.level_rts)
+        idx = self.gloran.disk_bytes if self.gloran else 0
+        return data + rt + idx
+
+    @property
+    def memory_bytes(self) -> int:
+        mem = len(self.mem) * self.config.entry_size
+        blooms = sum(l.bloom.nbytes for l in self.levels if l is not None)
+        fences = sum(
+            l.data_blocks() * self.config.key_size
+            for l in self.levels if l is not None)
+        g = self.gloran.memory_bytes if self.gloran else 0
+        return mem + blooms + fences + g
+
+    def stats(self) -> dict:
+        return {
+            "entries": self.num_entries,
+            "levels": [len(l) if l is not None else 0 for l in self.levels],
+            "seq": self.seq,
+            "disk_bytes": self.disk_bytes,
+            "memory_bytes": self.memory_bytes,
+            "io": self.io.snapshot(),
+        }

@@ -1,0 +1,11 @@
+"""LM model stack: attention/MoE/SSM/hybrid decoders with logical-axis
+sharding and scan-over-layers compilation."""
+
+from .model import Transformer
+from .params import (ParamSpec, count_params, tree_abstract, tree_init,
+                     tree_shardings)
+from .sharding import DEFAULT_RULES, ShardingRules, constrain, sharding_for
+
+__all__ = ["Transformer", "ParamSpec", "count_params", "tree_abstract",
+           "tree_init", "tree_shardings", "DEFAULT_RULES", "ShardingRules",
+           "constrain", "sharding_for"]

@@ -1,0 +1,157 @@
+"""GQA attention (causal / sliding-window / local-global) + KV cache.
+
+Training and prefill use the differentiable jnp path (the Pallas
+`flash_attention` kernel covers the TPU serving hot spot; both share
+semantics via kernels/flash_attention/ref.py).  ``window`` may be a traced
+scalar (-1 = full attention) so heterogeneous stacks (gemma3 5:1
+local:global) scan over per-layer window values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rope
+from .sharding import ShardingRules, constrain
+
+
+def masked_attention(q, k, v, *, window, q_offset, lengths=None):
+    """q: (B,Sq,Hq,D); k/v: (B,Skv,Hkv,D); window: traced int (-1=full).
+
+    Causal with suffix alignment: absolute query position = q_offset + i.
+    ``lengths``: optional (B,) valid kv lengths (decode with ragged cache).
+
+    GQA is a grouped einsum — K/V are never materialized per q-head
+    (a jnp.repeat on a sharded KV cache forces SPMD rematerialization and
+    4-8x the cache bytes).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, group, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(skv)[None, :]
+    mask = k_pos <= q_pos
+    mask &= jnp.where(window > 0, k_pos > (q_pos - window), True)
+    mask = mask[None, None, None]
+    if lengths is not None:
+        mask = mask & (k_pos[None, None, None] <
+                       lengths[:, None, None, None, None])
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def banded_local_attention(q, k, v, *, window: int):
+    """Sliding-window self-attention computing only the W-band of scores.
+
+    Masked-full attention materializes S x S scores even when the window
+    is tiny (gemma3: 512 of 32768 -> 98% of score memory/flops wasted).
+    Queries are blocked by W; block i attends key blocks [i-1, i]
+    (sufficient for window <= W), so scores are (S x 2W): a 2W/S fraction
+    of the full computation.  ``window`` must be STATIC; S % window == 0
+    (callers pad).
+    """
+    b, s, hq, d = q.shape
+    _, _, hkv, _ = k.shape
+    w = window
+    assert s % w == 0 and s >= 2 * w
+    nb = s // w
+    group = hq // hkv
+    scale = d ** -0.5
+
+    qb = q.reshape(b, nb, w, hkv, group, d)
+    kb = k.reshape(b, nb, w, hkv, d)
+    vb = v.reshape(b, nb, w, hkv, d)
+    zero = jnp.zeros_like(kb[:, :1])
+    k2 = jnp.concatenate([jnp.concatenate([zero, kb[:, :-1]], axis=1), kb],
+                         axis=2)  # (b, nb, 2w, hkv, d)
+    v2 = jnp.concatenate([jnp.concatenate([zero, vb[:, :-1]], axis=1), vb],
+                         axis=2)
+
+    sc = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qb.astype(jnp.float32),
+                    k2.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(w)[:, None] + w  # within-band absolute offsets
+    k_pos = jnp.arange(2 * w)[None, :]
+    first = jnp.arange(nb) == 0  # block 0's prev-band is padding
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - w)
+    mask = mask[None, None] & ~(first[None, :, None, None]
+                                & (k_pos[None, None] < w))
+    sc = jnp.where(mask[:, :, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p, v2.astype(jnp.float32))
+    return o.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def attention_block(x, wq, wk, wv, wo, *, n_heads, n_kv_heads, head_dim,
+                    positions, window, rope_fraction, rules: ShardingRules,
+                    cache=None, cache_pos=None, ring: bool = False,
+                    static_local_window: int | None = None):
+    """Full attention sublayer (projections + rope + attention + out).
+
+    cache: None (train/prefill over x's own keys) or dict(k=(B,Smax,Hkv,D),
+    v=...) for decode; cache_pos: absolute decode position.  ``ring=True``
+    treats the cache as a circular window buffer (SWA long-context decode):
+    writes go to pos % cache_len and every written slot is attended (the
+    buffer holds exactly the last ``window`` positions; softmax is
+    permutation-invariant so slot order is irrelevant).
+    Returns (out, new_cache_kv or computed kv for prefill caching).
+    """
+    b, s, dm = x.shape
+    # 3-D projection weights (D, H, hd): head/head_dim sharding flows
+    # through the einsum with no reshape (reshaping a sharded fused H*hd
+    # dim forces SPMD rematerialization).
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    q = constrain(q, ("batch", None, "q_heads", "head_dim"), rules)
+    k = constrain(k, ("batch", None, "kv_heads", "head_dim"), rules)
+    v = constrain(v, ("batch", None, "kv_heads", "head_dim"), rules)
+    q = rope(q, positions, fraction=rope_fraction)
+    k = rope(k, positions, fraction=rope_fraction)
+
+    if cache is None:
+        slw = static_local_window
+        if slw is not None and s % slw == 0 and s >= 2 * slw:
+            # Heterogeneous stacks (gemma3 5:1): the scanned per-layer
+            # ``window`` picks banded (local layers) or full (globals).
+            o = jax.lax.cond(
+                window > 0,
+                lambda: banded_local_attention(q, k, v, window=slw),
+                lambda: masked_attention(q, k, v, window=jnp.int32(-1),
+                                         q_offset=0))
+            new_kv = (k, v)
+        else:
+            o = masked_attention(q, k, v, window=window, q_offset=0)
+            new_kv = (k, v)
+    else:
+        cache_len = cache["k"].shape[1]
+        if ring:
+            write_pos = cache_pos % cache_len
+            q_offset = cache_len  # all written slots are in-window
+            eff_window = jnp.int32(-1)
+            length = jnp.minimum(cache_pos + s, cache_len)
+        else:
+            write_pos = cache_pos
+            q_offset = cache_pos
+            eff_window = window
+            length = cache_pos + s
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write_pos, 0, 0))
+        ck = constrain(ck, ("cache_batch", "cache_seq", "cache_heads",
+                            "cache_dim"), rules)
+        cv = constrain(cv, ("cache_batch", "cache_seq", "cache_heads",
+                            "cache_dim"), rules)
+        lengths = jnp.full((b,), length, dtype=jnp.int32)
+        o = masked_attention(q, ck, cv, window=eff_window,
+                             q_offset=q_offset, lengths=lengths)
+        new_kv = {"k": ck, "v": cv}
+    out = jnp.einsum("bshk,hkd->bsd", o, wo)
+    return out, new_kv

@@ -1,0 +1,62 @@
+"""Shared neural layers: RMSNorm, rotary embeddings, SwiGLU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, *, base: float = 10000.0, fraction: float = 1.0):
+    """Rotary embedding on the leading ``fraction`` of head dims.
+
+    x: (B, S, H, D); positions: (B, S) int32.  chatglm3 uses fraction=0.5
+    (2-d RoPE on half the dims); others use 1.0.
+    """
+    b, s, h, d = x.shape
+    d_rot = int(d * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    half = d_rot // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]  # (B,S,1,half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = xr[..., :half].astype(jnp.float32), \
+        xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def cross_entropy_loss(logits, labels, *, z_loss: float = 0.0):
+    """Mean CE over tokens; logits (..., V) in any dtype, f32 math.
+
+    The label pick uses an iota-compare-select (fuses under vocab-sharded
+    logits; take_along_axis on a sharded dim lowers to expensive gathers).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * (lse ** 2).mean()
+    return loss

@@ -1,0 +1,520 @@
+"""Model assembly: dense / MoE / SSM / hybrid decoder stacks.
+
+All stacks scan over layers with stacked parameters (compact HLO — the 512
+device dry-run compiles on one host).  Heterogeneous stacks are expressed
+as scanned per-layer static metadata (gemma3's 5:1 local:global = per-layer
+window vector) or grouped scans (zamba2's shared attention block applied
+between groups of Mamba2 layers).
+
+Entry points:
+  forward_train(params, tokens|embeds)            -> logits
+  prefill(params, tokens|embeds)                  -> (logits, cache)
+  decode_step(params, token, cache, pos)          -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import attention_block
+from .layers import rmsnorm, swiglu
+from .moe import moe_ffn
+from .params import ParamSpec
+from .sharding import ShardingRules, constrain
+from .ssm import mamba2_block
+
+P = ParamSpec
+
+
+class Transformer:
+    # Tensor-parallel width of the production meshes ('model' axis).
+    MODEL_PAR = 16
+
+    def __init__(self, cfg: ModelConfig, rules: ShardingRules | None = None):
+        self.cfg = cfg
+        self.rules = rules or ShardingRules()
+        # Resolve head sharding per arch: shard q heads when 16-divisible,
+        # else shard head_dim (gemma3/paligemma: 4-8 heads of dim 256),
+        # else replicate (h2o/zamba: 120/112-dim heads).
+        m = self.MODEL_PAR
+        if cfg.n_heads and cfg.n_heads % m == 0:
+            q_rule, hd_rule = "model", None
+        elif cfg.head_dim_ and cfg.head_dim_ % m == 0:
+            q_rule, hd_rule = None, "model"
+        else:
+            q_rule, hd_rule = None, None
+        kv_rule = "model" if (cfg.n_kv_heads and cfg.n_kv_heads % m == 0
+                              and hd_rule is None) else None
+        self.rules = self.rules.with_overrides(
+            q_heads=q_rule, kv_heads=kv_rule, head_dim=hd_rule)
+        if cfg.sharding_overrides:
+            self.rules = self.rules.with_overrides(**cfg.sharding_overrides)
+        self.dtype = jnp.dtype(cfg.dtype)
+        # Static window for banded local attention (train/prefill):
+        # uniform-SWA archs use cfg.window; local:global stacks use the
+        # local window (global layers take the full path via lax.cond).
+        self._static_window = (cfg.local_window if cfg.local_global
+                               else cfg.window)
+
+    # ------------------------------------------------------------- specs
+    def _attn_specs(self, lead: tuple, lead_axes: tuple) -> dict:
+        c = self.cfg
+        hd = c.head_dim_
+        return {
+            "ln": P(lead + (c.d_model,), lead_axes + ("embed",), "ones"),
+            "wq": P(lead + (c.d_model, c.n_heads, hd),
+                    lead_axes + ("embed_fsdp", "q_heads", "head_dim")),
+            "wk": P(lead + (c.d_model, c.n_kv_heads, hd),
+                    lead_axes + ("embed_fsdp", "kv_heads", "head_dim")),
+            "wv": P(lead + (c.d_model, c.n_kv_heads, hd),
+                    lead_axes + ("embed_fsdp", "kv_heads", "head_dim")),
+            "wo": P(lead + (c.n_heads, hd, c.d_model),
+                    lead_axes + ("q_heads", "head_dim", "embed_fsdp")),
+        }
+
+    def _mlp_specs(self, lead: tuple, lead_axes: tuple) -> dict:
+        c = self.cfg
+        return {
+            "ln": P(lead + (c.d_model,), lead_axes + ("embed",), "ones"),
+            "w_gate": P(lead + (c.d_model, c.d_ff),
+                        lead_axes + ("embed_fsdp", "mlp")),
+            "w_up": P(lead + (c.d_model, c.d_ff),
+                      lead_axes + ("embed_fsdp", "mlp")),
+            "w_down": P(lead + (c.d_ff, c.d_model),
+                        lead_axes + ("mlp", "embed_fsdp")),
+        }
+
+    def _moe_specs(self, lead: tuple, lead_axes: tuple) -> dict:
+        c, m = self.cfg, self.cfg.moe
+        out = {
+            "ln": P(lead + (c.d_model,), lead_axes + ("embed",), "ones"),
+            "router": P(lead + (c.d_model, m.n_experts),
+                        lead_axes + ("embed", None)),
+            "w_gate": P(lead + (m.n_experts, c.d_model, m.d_expert),
+                        lead_axes + ("experts", "embed_fsdp", "expert_out")),
+            "w_up": P(lead + (m.n_experts, c.d_model, m.d_expert),
+                      lead_axes + ("experts", "embed_fsdp", "expert_out")),
+            "w_down": P(lead + (m.n_experts, m.d_expert, c.d_model),
+                        lead_axes + ("experts", "expert_out", "embed_fsdp")),
+        }
+        if m.shared_expert:
+            out["shared"] = {
+                "w_gate": P(lead + (c.d_model, m.d_expert),
+                            lead_axes + ("embed_fsdp", "mlp")),
+                "w_up": P(lead + (c.d_model, m.d_expert),
+                          lead_axes + ("embed_fsdp", "mlp")),
+                "w_down": P(lead + (m.d_expert, c.d_model),
+                            lead_axes + ("mlp", "embed_fsdp")),
+            }
+        return out
+
+    def _mamba_specs(self, lead: tuple, lead_axes: tuple) -> dict:
+        c = self.cfg
+        di = c.ssm.expand * c.d_model
+        n = c.ssm.d_state
+        nh = di // c.ssm.head_dim
+        return {
+            "ln": P(lead + (c.d_model,), lead_axes + ("embed",), "ones"),
+            "w_in": P(lead + (c.d_model, 2 * di),
+                      lead_axes + ("embed_fsdp", "mlp")),
+            "w_bc": P(lead + (c.d_model, 2 * n),
+                      lead_axes + ("embed_fsdp", None)),
+            "w_dt": P(lead + (c.d_model, nh),
+                      lead_axes + ("embed_fsdp", "ssm_heads")),
+            "dt_bias": P(lead + (nh,), lead_axes + ("ssm_heads",),
+                         "dt_bias"),
+            "a_log": P(lead + (nh,), lead_axes + ("ssm_heads",), "a_log"),
+            "d_skip": P(lead + (nh,), lead_axes + ("ssm_heads",), "ones"),
+            "conv_w": P(lead + (c.ssm.conv_width, di),
+                        lead_axes + ("conv", "mlp")),
+            "out_norm": P(lead + (di,), lead_axes + ("mlp",), "ones"),
+            "w_out": P(lead + (di, c.d_model),
+                       lead_axes + ("mlp", "embed_fsdp")),
+        }
+
+    def param_specs(self) -> dict:
+        c = self.cfg
+        specs: dict = {
+            "final_norm": P((c.d_model,), ("embed",), "ones"),
+            "lm_head": P((c.d_model, c.vocab), ("embed_fsdp", "vocab")),
+        }
+        if c.stub_frontend is None:
+            specs["embed"] = P((c.vocab, c.d_model), ("vocab", "embed"),
+                               "normal", 1.0)
+        L = (c.n_layers,)
+        LA = ("layers",)
+        if c.family in ("dense", "moe", "vlm", "audio"):
+            layer = {"attn": self._attn_specs(L, LA)}
+            if c.moe is not None:
+                layer["moe"] = self._moe_specs(L, LA)
+            else:
+                layer["mlp"] = self._mlp_specs(L, LA)
+            specs["layers"] = layer
+        elif c.family == "ssm":
+            specs["layers"] = {"mamba": self._mamba_specs(L, LA)}
+        elif c.family == "hybrid":
+            per = c.hybrid_attn_every or 6
+            n_groups, tail = divmod(c.n_layers, per)
+            G = (n_groups, per)
+            GA = ("groups", "stack")
+            specs["groups"] = {"mamba": self._mamba_specs(G, GA)}
+            if tail:
+                specs["tail"] = {"mamba": self._mamba_specs((tail,),
+                                                            ("layers",))}
+            specs["shared_attn"] = self._attn_specs((), ())
+            specs["shared_mlp"] = self._mlp_specs((), ())
+        else:
+            raise ValueError(c.family)
+        return specs
+
+    # ----------------------------------------------------------- helpers
+    def _window_vector(self) -> jnp.ndarray:
+        """Per-layer attention window (-1 = full), static metadata."""
+        c = self.cfg
+        if c.local_global is not None:
+            per = c.local_global + 1  # N local then 1 global
+            w = [(c.local_window or 1024) if (i % per) != c.local_global
+                 else -1 for i in range(c.n_layers)]
+        elif c.window is not None:
+            w = [c.window] * c.n_layers
+        else:
+            w = [-1] * c.n_layers
+        return jnp.asarray(w, dtype=jnp.int32)
+
+    def _block_dense(self, x, lp, window, positions, cache, cache_pos,
+                     ring=False):
+        c = self.cfg
+        h, new_kv = attention_block(
+            rmsnorm(x, lp["attn"]["ln"], c.norm_eps),
+            lp["attn"]["wq"], lp["attn"]["wk"], lp["attn"]["wv"],
+            lp["attn"]["wo"], n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+            head_dim=c.head_dim_, positions=positions, window=window,
+            rope_fraction=c.rope_fraction, rules=self.rules, cache=cache,
+            cache_pos=cache_pos, ring=ring,
+            static_local_window=self._static_window)
+        x = x + h
+        if c.moe is not None:
+            mp = lp["moe"]
+            y = moe_ffn(rmsnorm(x, mp["ln"], c.norm_eps), mp["router"],
+                        mp["w_gate"], mp["w_up"], mp["w_down"],
+                        top_k=c.moe.top_k,
+                        capacity_factor=c.moe.capacity_factor,
+                        rules=self.rules, shared=mp.get("shared"))
+        else:
+            mp = lp["mlp"]
+            y = swiglu(rmsnorm(x, mp["ln"], c.norm_eps), mp["w_gate"],
+                       mp["w_up"], mp["w_down"])
+        x = x + y
+        return constrain(x, ("batch", "act_seq", "embed"), self.rules), new_kv
+
+    def _block_mamba(self, x, lp, state, return_state: bool = False):
+        c = self.cfg
+        y, new_state = mamba2_block(rmsnorm(x, lp["ln"], c.norm_eps),
+                                    lp, c, self.rules, state=state,
+                                    return_state=return_state)
+        x = x + y
+        return constrain(x, ("batch", "act_seq", "embed"), self.rules), new_state
+
+    def _maybe_remat(self, f):
+        if self.cfg.remat == "full":
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies.nothing_saveable)
+        return f
+
+    # ----------------------------------------------------- forward paths
+    def _embed_in(self, params, tokens, embeds):
+        c = self.cfg
+        if c.stub_frontend is not None:
+            assert embeds is not None, "stub frontend takes embeddings"
+            x = embeds.astype(self.dtype)
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+            x = x * jnp.asarray(c.d_model ** 0.5, self.dtype)
+        return constrain(x, ("batch", "act_seq", "embed"), self.rules)
+
+    def _head_out(self, params, x):
+        x = rmsnorm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+        return constrain(logits, ("batch", None, "vocab"), self.rules)
+
+    def forward_train(self, params, tokens=None, embeds=None):
+        """Teacher-forced forward -> logits (B, S, V)."""
+        c = self.cfg
+        x = self._embed_in(params, tokens, embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        if c.family in ("dense", "moe", "vlm", "audio"):
+            windows = self._window_vector()
+
+            def body(carry, xs):
+                lp, w = xs
+                out, _ = self._block_dense(carry, lp, w, positions, None,
+                                           None)
+                return out, None
+
+            x, _ = jax.lax.scan(self._maybe_remat(body), x,
+                                (params["layers"], windows))
+        elif c.family == "ssm":
+            def body(carry, lp):
+                out, _ = self._block_mamba(carry, lp, None)
+                return out, None
+
+            x, _ = jax.lax.scan(self._maybe_remat(body), x,
+                                params["layers"]["mamba"])
+        else:  # hybrid
+            x = self._hybrid_forward(params, x, positions)
+        return self._head_out(params, x)
+
+    def _hybrid_forward(self, params, x, positions):
+        c = self.cfg
+        window = jnp.int32(c.window if c.window else -1)
+
+        def shared_block(h):
+            out, _ = attention_block(
+                rmsnorm(h, params["shared_attn"]["ln"], c.norm_eps),
+                params["shared_attn"]["wq"], params["shared_attn"]["wk"],
+                params["shared_attn"]["wv"], params["shared_attn"]["wo"],
+                n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+                head_dim=c.head_dim_, positions=positions, window=window,
+                rope_fraction=c.rope_fraction, rules=self.rules)
+            h = h + out
+            mp = params["shared_mlp"]
+            h = h + swiglu(rmsnorm(h, mp["ln"], c.norm_eps), mp["w_gate"],
+                           mp["w_up"], mp["w_down"])
+            return h
+
+        def group_body(carry, gp):
+            def inner(carry2, lp):
+                out, _ = self._block_mamba(carry2, lp, None)
+                return out, None
+
+            h, _ = jax.lax.scan(inner, carry, gp["mamba"])
+            return shared_block(h), None
+
+        x, _ = jax.lax.scan(self._maybe_remat(group_body), x,
+                            params["groups"])
+        if "tail" in params:
+            def inner(carry2, lp):
+                out, _ = self._block_mamba(carry2, lp, None)
+                return out, None
+
+            x, _ = jax.lax.scan(self._maybe_remat(inner), x,
+                                params["tail"]["mamba"])
+        return x
+
+    # ------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> dict:
+        """Abstract cache shapes (used by dry-run input_specs too)."""
+        c = self.cfg
+        dtype = dtype or self.dtype
+        hd = c.head_dim_
+        if c.family in ("dense", "moe", "vlm", "audio"):
+            shape = (c.n_layers, batch, max_len, c.n_kv_heads, hd)
+            return {"k": jnp.zeros(shape, dtype),
+                    "v": jnp.zeros(shape, dtype)}
+        di = c.ssm.expand * c.d_model
+        nh = di // c.ssm.head_dim
+        if c.family == "ssm":
+            return {
+                "h": jnp.zeros((c.n_layers, batch, nh, c.ssm.d_state,
+                                c.ssm.head_dim), jnp.float32),
+                "conv": jnp.zeros((c.n_layers, batch,
+                                   c.ssm.conv_width - 1, di), dtype),
+            }
+        # hybrid: mamba states per layer + shared-attn KV per application.
+        per = c.hybrid_attn_every or 6
+        n_groups, tail = divmod(c.n_layers, per)
+        cache = {
+            "gh": jnp.zeros((n_groups, per, batch, nh, c.ssm.d_state,
+                             c.ssm.head_dim), jnp.float32),
+            "gconv": jnp.zeros((n_groups, per, batch,
+                                c.ssm.conv_width - 1, di), dtype),
+            "ak": jnp.zeros((n_groups, batch, max_len, c.n_kv_heads, hd),
+                            dtype),
+            "av": jnp.zeros((n_groups, batch, max_len, c.n_kv_heads, hd),
+                            dtype),
+        }
+        if tail:
+            cache["th"] = jnp.zeros((tail, batch, nh, c.ssm.d_state,
+                                     c.ssm.head_dim), jnp.float32)
+            cache["tconv"] = jnp.zeros((tail, batch, c.ssm.conv_width - 1,
+                                        di), dtype)
+        return cache
+
+    def cache_logical_axes(self) -> dict:
+        c = self.cfg
+        kv = ("layers", "cache_batch", "cache_seq", "cache_heads",
+              "cache_dim")
+        if c.family in ("dense", "moe", "vlm", "audio"):
+            return {"k": kv, "v": kv}
+        sh = ("layers", "cache_batch", "ssm_heads", None, None)
+        cv = ("layers", "cache_batch", None, "mlp")
+        if c.family == "ssm":
+            return {"h": sh, "conv": cv}
+        out = {"gh": ("groups",) + sh, "gconv": ("groups",) + cv,
+               "ak": ("groups",) + kv[1:], "av": ("groups",) + kv[1:]}
+        per = c.hybrid_attn_every or 6
+        if c.n_layers % per:
+            out["th"] = sh
+            out["tconv"] = cv
+        return out
+
+    def prefill(self, params, tokens=None, embeds=None):
+        """Forward + emit a KV/state cache sized to the input length."""
+        c = self.cfg
+        x = self._embed_in(params, tokens, embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        if c.family in ("dense", "moe", "vlm", "audio"):
+            windows = self._window_vector()
+
+            def body(carry, xs):
+                lp, w = xs
+                out, kv = self._block_dense(carry, lp, w, positions, None,
+                                            None)
+                return out, kv
+
+            x, kvs = jax.lax.scan(self._maybe_remat(body), x,
+                                  (params["layers"], windows))
+            cache = {"k": kvs[0], "v": kvs[1]}
+            return self._head_out(params, x[:, -1:]), cache
+        if c.family == "ssm":
+            def body(carry, lp):
+                out, st = self._block_mamba(carry, lp, None,
+                                            return_state=True)
+                return out, (st["h"], st["conv"])
+
+            x, (hs, convs) = jax.lax.scan(self._maybe_remat(body), x,
+                                          params["layers"]["mamba"])
+            return self._head_out(params, x[:, -1:]), \
+                {"h": hs, "conv": convs}
+        # hybrid: mamba states + shared-attn KV per group application.
+        window = jnp.int32(c.window if c.window else -1)
+
+        def group_body(carry, gp):
+            def inner(carry2, lp):
+                out, st = self._block_mamba(carry2, lp, None,
+                                            return_state=True)
+                return out, (st["h"], st["conv"])
+
+            h, (hs, convs) = jax.lax.scan(inner, carry, gp["mamba"])
+            out, kv = attention_block(
+                rmsnorm(h, params["shared_attn"]["ln"], c.norm_eps),
+                params["shared_attn"]["wq"], params["shared_attn"]["wk"],
+                params["shared_attn"]["wv"], params["shared_attn"]["wo"],
+                n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+                head_dim=c.head_dim_, positions=positions, window=window,
+                rope_fraction=c.rope_fraction, rules=self.rules)
+            h = h + out
+            mp = params["shared_mlp"]
+            h = h + swiglu(rmsnorm(h, mp["ln"], c.norm_eps), mp["w_gate"],
+                           mp["w_up"], mp["w_down"])
+            return h, (hs, convs, kv[0], kv[1])
+
+        x, (ghs, gconvs, aks, avs) = jax.lax.scan(
+            self._maybe_remat(group_body), x, params["groups"])
+        cache = {"gh": ghs, "gconv": gconvs, "ak": aks, "av": avs}
+        if "tail" in params:
+            def inner(carry2, lp):
+                out, st = self._block_mamba(carry2, lp, None,
+                                            return_state=True)
+                return out, (st["h"], st["conv"])
+
+            x, (ths, tconvs) = jax.lax.scan(self._maybe_remat(inner), x,
+                                            params["tail"]["mamba"])
+            cache["th"] = ths
+            cache["tconv"] = tconvs
+        return self._head_out(params, x[:, -1:]), cache
+
+    def decode_step(self, params, token, cache, pos, ring: bool = False):
+        """One decode step. token: (B, 1) int32 (or (B,1,D) embeds for stub
+        frontends); pos: scalar int32 current position.  ``ring=True``
+        treats attention caches as circular window buffers (SWA long
+        decode)."""
+        c = self.cfg
+        if c.stub_frontend is not None:
+            x = self._embed_in(params, None, token)
+        else:
+            x = self._embed_in(params, token, None)
+        b = x.shape[0]
+        positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+        if c.family in ("dense", "moe", "vlm", "audio"):
+            windows = self._window_vector()
+
+            def body(carry, xs):
+                lp, w, ck, cv = xs
+                out, new_kv = self._block_dense(carry, lp, w, positions,
+                                                {"k": ck, "v": cv}, pos,
+                                                ring=ring)
+                return out, (new_kv["k"], new_kv["v"])
+
+            x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], windows,
+                                                 cache["k"], cache["v"]))
+            return self._head_out(params, x), {"k": nk, "v": nv}
+        if c.family == "ssm":
+            def body(carry, xs):
+                lp, h, conv = xs
+                out, st = self._block_mamba(carry, lp,
+                                            {"h": h, "conv": conv})
+                return out, (st["h"], st["conv"])
+
+            x, (nh_, nc_) = jax.lax.scan(body, x,
+                                         (params["layers"]["mamba"],
+                                          cache["h"], cache["conv"]))
+            return self._head_out(params, x), {"h": nh_, "conv": nc_}
+        # hybrid
+        return self._hybrid_decode(params, x, cache, pos, positions, ring)
+
+    def _hybrid_decode(self, params, x, cache, pos, positions, ring=False):
+        c = self.cfg
+        window = jnp.int32(c.window if c.window else -1)
+
+        def group_body(carry, xs):
+            gp, gh, gconv, ak, av = xs
+
+            def inner(carry2, ys):
+                lp, h, conv = ys
+                out, st = self._block_mamba(carry2, lp,
+                                            {"h": h, "conv": conv})
+                return out, (st["h"], st["conv"])
+
+            h, (nh_, nc_) = jax.lax.scan(inner, carry,
+                                         (gp["mamba"], gh, gconv))
+            out, new_kv = attention_block(
+                rmsnorm(h, params["shared_attn"]["ln"], c.norm_eps),
+                params["shared_attn"]["wq"], params["shared_attn"]["wk"],
+                params["shared_attn"]["wv"], params["shared_attn"]["wo"],
+                n_heads=c.n_heads, n_kv_heads=c.n_kv_heads,
+                head_dim=c.head_dim_, positions=positions, window=window,
+                rope_fraction=c.rope_fraction, rules=self.rules,
+                cache={"k": ak, "v": av}, cache_pos=pos, ring=ring)
+            h = h + out
+            mp = params["shared_mlp"]
+            h = h + swiglu(rmsnorm(h, mp["ln"], c.norm_eps), mp["w_gate"],
+                           mp["w_up"], mp["w_down"])
+            return h, (nh_, nc_, new_kv["k"], new_kv["v"])
+
+        x, (ngh, ngconv, nak, nav) = jax.lax.scan(
+            group_body, x, (params["groups"], cache["gh"], cache["gconv"],
+                            cache["ak"], cache["av"]))
+        new_cache = {"gh": ngh, "gconv": ngconv, "ak": nak, "av": nav}
+        if "tail" in params:
+            def inner(carry2, ys):
+                lp, h, conv = ys
+                out, st = self._block_mamba(carry2, lp,
+                                            {"h": h, "conv": conv})
+                return out, (st["h"], st["conv"])
+
+            x, (nth, ntconv) = jax.lax.scan(
+                inner, x, (params["tail"]["mamba"], cache["th"],
+                           cache["tconv"]))
+            new_cache["th"] = nth
+            new_cache["tconv"] = ntconv
+        return self._head_out(params, x), new_cache

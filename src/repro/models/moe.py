@@ -1,0 +1,97 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+No (tokens x experts x capacity) one-hots: token->expert assignments are
+argsorted by expert id, ranked within expert by a cumulative count, dropped
+beyond capacity, and scattered into an (E, C, D) buffer — static shapes,
+scalable to kimi-k2's 384 experts where dense dispatch is impossible.
+Top-k gate weights are softmax-renormalized over the selected experts
+(Mixtral §2).  An optional shared expert (Kimi/DeepSeek style) adds a dense
+SwiGLU path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import swiglu
+from .sharding import ShardingRules, constrain
+
+
+def moe_ffn(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+            capacity_factor: float, rules: ShardingRules,
+            shared=None):
+    """x: (B, S, D); router_w: (D, E); w_*: (E, D, F) / (E, F, D).
+
+    Returns (B, S, D)."""
+    b, s, d = x.shape
+    e = router_w.shape[-1]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)  # (t, k)
+    gates = jax.nn.softmax(top_vals, axis=-1)  # renormalize over selected
+
+    flat_e = top_idx.reshape(-1)  # (t*k,)
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+
+    order = jnp.argsort(flat_e)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    g_sorted = flat_g[order]
+
+    # Rank within expert: position in sorted order minus expert offset.
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * top_k, dtype=jnp.int32) - offsets[e_sorted]
+
+    cap = int(max(8, -(-(t * top_k) // e * capacity_factor)))
+    cap = -(-cap // 8) * 8  # round up to 8
+
+    # Dispatch: scatter straight into the SHARDED (E, C, D) buffer with
+    # (expert, rank) index pairs; rank >= capacity drops via OOB mode.
+    # (A flat (E*C, D) intermediate would be scattered replicated on every
+    # device — at kimi-k2 scale that is a ~150 GB/device temp buffer.)
+    buf0 = constrain(jnp.zeros((e, cap, d), x.dtype),
+                     ("experts", "expert_in", "expert_d"), rules)
+    idx = jnp.stack([e_sorted, rank], axis=1)  # (t*k, 2)
+    buf = buf0.at[idx[:, 0], idx[:, 1]].add(
+        xf[tok_sorted], mode="drop", unique_indices=True)
+    buf = constrain(buf, ("experts", "expert_in", "expert_d"), rules)
+
+    # Expert-batched SwiGLU (einsum over the expert dim).
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    hh = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", hh, w_down)
+    out_buf = constrain(out_buf, ("experts", "expert_in", "expert_d"),
+                        rules)
+
+    # Combine: gather each kept pair's expert output (OOB rank -> 0 via
+    # fill), weight by the gate, scatter-add back to tokens.
+    pair_out = out_buf.at[idx[:, 0], idx[:, 1]].get(
+        mode="fill", fill_value=0) * g_sorted[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[tok_sorted].add(pair_out)
+
+    if shared is not None:
+        y = y + swiglu(xf, shared["w_gate"], shared["w_up"],
+                       shared["w_down"])
+    return y.reshape(b, s, d)
+
+
+def moe_aux_loss(x, router_w, *, top_k: int):
+    """Load-balancing auxiliary loss (Switch-style f*P)."""
+    t = x.shape[0] * x.shape[1]
+    e = router_w.shape[-1]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32)).reshape(t, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_idx = jax.lax.top_k(logits, top_k)
+    f = jnp.zeros((e,), jnp.float32).at[top_idx.reshape(-1)].add(
+        1.0 / (t * top_k))
+    p = probs.mean(axis=0)
+    return e * jnp.sum(f * p)

@@ -1,0 +1,71 @@
+"""Abstract parameter specs: shapes + logical sharding axes + init rules.
+
+The model is defined over a pytree of ``ParamSpec``; from it we derive
+  - jax.ShapeDtypeStruct trees (allocation-free dry-run lowering),
+  - NamedSharding trees (in_shardings for pjit),
+  - materialized parameters (CPU smoke tests / the end-to-end example).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import ShardingRules, sharding_for
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | ones | zeros | a_log | dt_bias
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_abstract(specs, dtype) -> dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+        is_leaf=is_spec)
+
+
+def tree_shardings(specs, mesh, rules: ShardingRules):
+    return jax.tree.map(lambda s: sharding_for(s.axes, mesh, rules), specs,
+                        is_leaf=is_spec)
+
+
+def tree_init(specs, rng: jax.Array, dtype) -> dict:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    outs = []
+    for k, s in zip(keys, leaves):
+        if s.init == "normal":
+            x = jax.random.normal(k, s.shape, jnp.float32) * s.scale
+        elif s.init == "ones":
+            x = jnp.ones(s.shape, jnp.float32)
+        elif s.init == "zeros":
+            x = jnp.zeros(s.shape, jnp.float32)
+        elif s.init == "a_log":  # mamba2: A in -[1, 16], stored as log
+            u = jax.random.uniform(k, s.shape, jnp.float32, 1.0, 16.0)
+            x = jnp.log(u)
+        elif s.init == "dt_bias":  # softplus^-1 of dt in [1e-3, 1e-1]
+            u = jax.random.uniform(k, s.shape, jnp.float32, 1e-3, 1e-1)
+            x = u + jnp.log(-jnp.expm1(-u))
+        else:
+            raise ValueError(s.init)
+        outs.append(x.astype(dtype))
+    return jax.tree.unflatten(treedef, outs)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))

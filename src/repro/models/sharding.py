@@ -1,0 +1,108 @@
+"""Logical-axis sharding (MaxText-style rules -> PartitionSpec).
+
+Every parameter/activation dimension carries a *logical* axis name; a rule
+table maps logical axes to mesh axes.  Rules adapt to the mesh actually in
+use (single-pod ('data','model') vs multi-pod ('pod','data','model')) and
+per-architecture overrides handle divisibility (e.g. gemma3's 4 heads can't
+split 16-way -> shard head_dim instead).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+# Logical axes used across the stack:
+#   batch, seq, embed, mlp, heads, kv_heads, head_dim, qkv, vocab,
+#   experts, expert_in, expert_out, ssm_state, ssm_heads, conv, layers,
+#   groups, stack
+DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": None,  # residual-stream seq dim (seqpar variant -> model)
+    "embed": None,
+    "embed_fsdp": ("data",),  # FSDP weight shard of the d_model dim
+    "mlp": ("model",),
+    "q_heads": ("model",),  # resolved per-arch in Transformer.__init__
+    "kv_heads": None,
+    "head_dim": None,
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_in": ("data",),
+    "expert_d": None,  # dispatch-buffer d_model dim (decode -> data)
+    "expert_out": None,
+    "ssm_state": None,
+    "ssm_heads": ("model",),
+    "conv": None,
+    "layers": None,
+    "groups": None,
+    "stack": None,
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cache_heads": None,
+    "cache_dim": ("model",),
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def with_overrides(self, **kw) -> "ShardingRules":
+        r = dict(self.rules)
+        for k, v in kw.items():
+            r[k] = tuple(v) if isinstance(v, (list, tuple)) else (
+                None if v is None else (v,))
+        return ShardingRules(r)
+
+    def spec(self, axes: tuple[str | None, ...],
+             mesh_axes: tuple[str, ...]) -> PartitionSpec:
+        """Map logical axes -> PartitionSpec, dropping mesh axes that are
+        not present in the mesh and de-duplicating mesh axes (first logical
+        dim wins)."""
+        used: set[str] = set()
+        out = []
+        for ax in axes:
+            if ax is None:
+                out.append(None)
+                continue
+            target = self.rules.get(ax)
+            if target is None:
+                out.append(None)
+                continue
+            picked = tuple(m for m in target if m in mesh_axes and
+                           m not in used)
+            used.update(picked)
+            if len(picked) == 0:
+                out.append(None)
+            elif len(picked) == 1:
+                out.append(picked[0])
+            else:
+                out.append(picked)
+        return PartitionSpec(*out)
+
+
+def sharding_for(axes: tuple[str | None, ...], mesh: Mesh,
+                 rules: ShardingRules) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(axes, tuple(mesh.axis_names)))
+
+
+def constrain(x, axes: tuple[str | None, ...], rules: ShardingRules):
+    """with_sharding_constraint under the ambient mesh (no-op outside)."""
+    mesh = None
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            mesh = None
+    except Exception:
+        mesh = None
+    if mesh is None:
+        env = jax.interpreters.pxla.thread_resources.env
+        if env.physical_mesh.empty:
+            return x
+        mesh = env.physical_mesh
+    spec = rules.spec(axes, tuple(mesh.axis_names))
+    return jax.lax.with_sharding_constraint(x, spec)

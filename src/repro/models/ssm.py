@@ -1,0 +1,102 @@
+"""Mamba2 (SSD) block: in-proj, causal depthwise conv, SSD scan, gated
+out-proj.  The scan itself lives in kernels/ssd (Pallas intra-chunk kernel
++ jnp chunked reference used for the differentiable path).
+
+Decode keeps a recurrent state (h: (B, NH, N, P), conv tail: (B, W-1, Di))
+— constant memory per token, which is what makes SSM archs eligible for
+the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd.ops import ssd_chunked_scan
+from .layers import rmsnorm
+from .sharding import ShardingRules, constrain
+
+
+def _causal_conv(x, conv_w, tail=None):
+    """Depthwise causal conv. x: (B, S, Di); conv_w: (W, Di);
+    tail: (B, W-1, Di) previous context for decode."""
+    w = conv_w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, Di)
+    out = jnp.zeros_like(x)
+    for i in range(w):  # small static W (4): unrolled taps
+        out = out + xp[:, i:i + x.shape[1]] * conv_w[i][None, None, :]
+    new_tail = xp[:, x.shape[1]:]  # last W-1 positions
+    return out, new_tail
+
+
+def mamba2_block(x, p, cfg, rules: ShardingRules, state=None,
+                 return_state: bool = False):
+    """x: (B, S, D). p: layer params dict. state: None (train, or prefill
+    when ``return_state=True``) or dict(h, conv) for single-step decode.
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    di = cfg.ssm.expand * d
+    n = cfg.ssm.d_state
+    pdim = cfg.ssm.head_dim
+    nh = di // pdim
+
+    zx = jnp.einsum("bsd,de->bse", x, p["w_in"])  # (B,S,2*Di)
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"])  # (B,S,2N)
+    Bm, Cm = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))  # (B,S,NH)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (NH,)
+
+    xin, new_tail = _causal_conv(xin, p["conv_w"],
+                                 None if state is None else state["conv"])
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    xh = xin.reshape(b, s, nh, pdim)
+    xh = constrain(xh, ("batch", None, "ssm_heads", None), rules)
+
+    if state is None:
+        chunk = min(cfg.ssm.chunk, s)
+        if s % chunk:
+            pad = chunk - s % chunk
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            C_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            # Padding with dt=0 => exp(0)=1 decay and zero input: the
+            # final state equals the state at position s.
+            res = ssd_chunked_scan(xh_p, dt_p, A, B_p, C_p, chunk=chunk,
+                                   return_final=return_state)
+            y = (res[0] if return_state else res)[:, :s]
+            new_h = res[1] if return_state else None
+        else:
+            res = ssd_chunked_scan(xh, dt, A, Bm, Cm, chunk=chunk,
+                                   return_final=return_state)
+            y = res[0] if return_state else res
+            new_h = res[1] if return_state else None
+    else:
+        # Single-step recurrence: h <- exp(dt*A) h + dt * B x^T; y = C h.
+        assert s == 1
+        h = state["h"].astype(jnp.float32)  # (B, NH, N, P)
+        da = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])
+        upd = (dt[:, 0, :, None, None]
+               * Bm[:, 0, None, :, None].astype(jnp.float32)
+               * xh[:, 0, :, None, :].astype(jnp.float32))
+        h = h * da + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32),
+                       h)[:, None].reshape(b, 1, nh, pdim)
+        new_h = h
+    y = y.astype(x.dtype) + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if state is not None or return_state:
+        new_state = {"h": new_h, "conv": new_tail}
+    else:
+        new_state = None
+    return out, new_state

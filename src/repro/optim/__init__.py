@@ -1,0 +1,11 @@
+from .grad_compress import (compressed_psum, make_compressed_crosspod_reduce,
+                            quantize_roundtrip)
+from .optimizer import (OptimizerConfig, adafactor_init, adafactor_update,
+                        adamw_init, adamw_update, clip_by_global_norm,
+                        global_norm, lr_schedule, make_optimizer)
+
+__all__ = ["OptimizerConfig", "adafactor_init", "adafactor_update",
+           "adamw_init", "adamw_update", "clip_by_global_norm",
+           "global_norm", "lr_schedule", "make_optimizer",
+           "compressed_psum", "make_compressed_crosspod_reduce",
+           "quantize_roundtrip"]

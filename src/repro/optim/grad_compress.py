@@ -1,0 +1,93 @@
+"""Int8 gradient compression with error feedback for cross-pod reduction.
+
+At 1000+ node scale the pod-to-pod (DCI) axis is the slow hop; reducing
+bf16/f32 gradients across it wastes 2-4x bandwidth.  This implements the
+standard recipe: per-tensor-block scale -> int8 quantize -> all-reduce the
+int8 payload (here: psum of dequantized values inside shard_map, modelling
+the wire format) -> dequantize, with the quantization residual fed back
+into the next step (error feedback keeps SGD convergence; Karimireddy et
+al. 2019).
+
+``compressed_psum`` is numerically validated against exact psum in tests;
+``wrap_grads_with_compression`` composes it into a train step over the
+'pod' mesh axis only (intra-pod ICI reductions stay exact bf16).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as PSpec
+
+BLOCK = 256
+
+
+def _quantize(x32, block=BLOCK):
+    flat = x32.reshape(-1)
+    pad = -flat.shape[0] % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def _dequantize(q, scale, pad, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def quantize_roundtrip(x):
+    """Quantize + dequantize (the wire transform); returns (y, residual)."""
+    x32 = x.astype(jnp.float32)
+    q, scale, pad = _quantize(x32)
+    y = _dequantize(q, scale, pad, x32.shape)
+    return y, x32 - y
+
+
+def compressed_psum(grads, errors, axis_name: str):
+    """psum over ``axis_name`` with int8 wire format + error feedback.
+
+    grads/errors: pytrees (inside shard_map, with ``axis_name`` bound).
+    Returns (reduced_grads, new_errors)."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        y, resid = quantize_roundtrip(g32)
+        red = jax.lax.psum(y, axis_name) / n
+        return red, resid
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def make_compressed_crosspod_reduce(mesh, param_specs_tree):
+    """Returns reduce_fn(grads, errors) -> (grads, errors) that averages
+    gradients across the 'pod' axis in int8-with-error-feedback, leaving
+    intra-pod axes untouched (they reduce exactly during backward)."""
+    if "pod" not in mesh.axis_names:
+        return None
+
+    def reduce_fn(grads, errors):
+        specs = jax.tree.map(lambda _: PSpec(), grads)  # per-leaf full
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(specs, specs), out_specs=(specs, specs),
+            check_rep=False)
+        def inner(g, e):
+            return compressed_psum(g, e, "pod")
+
+        return inner(grads, errors)
+
+    return reduce_fn

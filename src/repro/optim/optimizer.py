@@ -1,0 +1,145 @@
+"""Optimizers: AdamW and Adafactor (factored second moments), pure JAX.
+
+Adafactor exists because the 1T-param MoE (kimi-k2) cannot hold AdamW's
+fp32 m/v (14 TB on 512 chips); factored row/col second-moment statistics
+cut optimizer state to ~(r+c) per matrix (Shazeer & Stern, 2018).  Both
+optimizers are pytree-shaped like the params, so they shard with the same
+logical rules (optimizer state inherits the param sharding).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(1, cfg.decay_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), \
+        norm
+
+
+# ------------------------------------------------------------------ AdamW
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, mu, nu):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_state = {"mu": treedef.unflatten([o[1] for o in out]),
+                 "nu": treedef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# -------------------------------------------------------------- Adafactor
+def adafactor_init(params):
+    def st(p):
+        if p.ndim >= 2:
+            # factor the two largest (trailing) dims; leading dims (layer
+            # stacks) are batched.
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(st, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, f):
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = decay * f["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * f["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = vr.mean(axis=-1, keepdims=True)
+            v = (vr[..., None] * vc[..., None, :]) / \
+                jnp.maximum(denom[..., None], 1e-30)
+            newf = {"vr": vr, "vc": vc}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            newf = {"v": v}
+        update = g / jnp.sqrt(v + 1e-30)
+        # Update clipping (RMS <= 1) as in the paper.
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        delta = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), newf
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_f = treedef.flatten_up_to(state["f"])
+    out = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_state = {"f": treedef.unflatten([o[1] for o in out]), "step": step}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, partial(adamw_update, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init, partial(adafactor_update, cfg)
+    raise ValueError(cfg.name)

@@ -1,0 +1,72 @@
+"""Roofline analysis unit tests: HLO collective parsing with while-loop
+trip counts, term math, and report generation over the results dir."""
+
+import numpy as np
+
+from repro.analysis.roofline import (RooflineReport, _while_trip_counts,
+                                     _split_computations, collective_bytes)
+
+HLO = """
+%add_f32 (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add_f32
+  %ag = bf16[64,512]{1,0} all-gather(%y), dimensions={0}
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %limit = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %limit), direction=LT
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond, body=%body
+  %rs = f32[32,128]{1,0} reduce-scatter(%z), dimensions={0}
+}
+"""
+
+
+def test_collective_bytes_loop_aware():
+    total, by_op = collective_bytes(HLO)
+    ar = 128 * 256 * 4 * 12  # f32 all-reduce x 12 trips
+    ag = 64 * 512 * 2 * 12  # bf16 all-gather x 12 trips
+    rs = 32 * 128 * 4  # outside the loop: x1
+    assert by_op["all-reduce"] == ar
+    assert by_op["all-gather"] == ag
+    assert by_op["reduce-scatter"] == rs
+    assert total == ar + ag + rs
+
+
+def test_trip_count_parse():
+    comps = _split_computations(HLO)
+    trips = _while_trip_counts(HLO, comps)
+    assert trips == {"body": 12}
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RooflineReport(arch="a", shape="s", mesh="single", chips=256,
+                      hlo_flops=256 * 197e12 * 2.0,  # 2 s of compute
+                      hlo_bytes=256 * 819e9 * 1.0,  # 1 s of memory
+                      coll_bytes=256 * 50e9 * 0.5,  # 0.5 s of collective
+                      model_flops=256 * 197e12 * 1.0)
+    assert abs(r.t_compute - 2.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.bottleneck == "compute"
+    assert abs(r.roofline_fraction - 1.0) < 1e-9
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+
+
+def test_report_loads_results_dir():
+    import os
+    import pytest
+    if not os.path.isdir("results") or not os.listdir("results"):
+        pytest.skip("no dry-run results present")
+    from repro.analysis.report import dryrun_table, load, roofline_table
+    rows = load("results")
+    assert len(rows) >= 1
+    t1 = dryrun_table(rows[:5])
+    t2 = roofline_table(rows)
+    assert "| arch |" in t1 and "bottleneck" in t2

@@ -1,0 +1,33 @@
+"""Banded local attention == masked full attention with the same window."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import banded_local_attention, masked_attention
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,d,w", [
+    (2, 128, 4, 2, 32, 32), (1, 256, 8, 1, 64, 64), (1, 96, 2, 2, 16, 16),
+])
+def test_banded_matches_masked(b, s, hq, hkv, d, w):
+    rng = np.random.default_rng(s + w)
+    q = jnp.asarray(rng.standard_normal((b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    got = banded_local_attention(q, k, v, window=w)
+    want = masked_attention(q, k, v, window=jnp.int32(w), q_offset=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_banded_first_block_has_no_phantom_prefix():
+    # Padding band of block 0 must not contribute.
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+    got = banded_local_attention(q, k, v, window=32)
+    want = masked_attention(q, k, v, window=jnp.int32(32), q_offset=0)
+    np.testing.assert_allclose(np.asarray(got[:, :32]),
+                               np.asarray(want[:, :32]), atol=2e-5)

@@ -1,0 +1,124 @@
+"""Disjointization: unit + property tests against brute-force oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AreaSet, disjointize, disjointize_oracle,
+                        merge_disjoint)
+
+
+def areas_from(recs):
+    return AreaSet.from_records(recs)
+
+
+class TestMergeDisjoint:
+    def test_empty(self):
+        e = AreaSet.empty()
+        a = areas_from([(0, 10, 0, 5)])
+        assert len(merge_disjoint(e, e)) == 0
+        assert merge_disjoint(a, e) is a
+        assert merge_disjoint(e, a) is a
+
+    def test_case_a_full_containment(self):
+        # Fig 5(a): beta fully dominated by alpha -> alpha only.
+        alpha = areas_from([(0, 100, 0, 50)])
+        beta = areas_from([(10, 20, 0, 30)])
+        out = merge_disjoint(alpha, beta)
+        assert out.is_disjoint_sorted()
+        rec = out.to_records()
+        assert rec.shape[0] == 1
+        assert tuple(rec[0]) == (0, 100, 0, 50)
+
+    def test_case_b_key_containment_splits(self):
+        # Fig 5(b): beta's key range inside alpha, beta more recent ->
+        # alpha split in two, beta's interval carries the union coverage.
+        alpha = areas_from([(0, 100, 0, 50)])
+        beta = areas_from([(10, 20, 0, 80)])
+        out = merge_disjoint(alpha, beta)
+        assert out.is_disjoint_sorted()
+        recs = [tuple(r) for r in out.to_records()]
+        assert recs == [(0, 10, 0, 50), (10, 20, 0, 80), (20, 100, 0, 50)]
+
+    def test_case_c_partial_overlap_trims(self):
+        # Fig 5(c): partial key overlap, beta more recent -> alpha trimmed.
+        alpha = areas_from([(0, 50, 0, 40)])
+        beta = areas_from([(30, 90, 0, 70)])
+        out = merge_disjoint(alpha, beta)
+        recs = [tuple(r) for r in out.to_records()]
+        assert recs == [(0, 30, 0, 40), (30, 90, 0, 70)]
+
+    def test_seq_gap_keeps_winner_only(self):
+        # Old area entirely below the newer one's floor: vacuous, dropped in
+        # the overlap (paper's winner-only rule).
+        alpha = areas_from([(0, 100, 0, 10)])
+        beta = areas_from([(0, 100, 15, 30)])
+        out = merge_disjoint(alpha, beta)
+        recs = [tuple(r) for r in out.to_records()]
+        assert recs == [(0, 100, 15, 30)]
+
+    def test_adjacent_same_rect_coalesce(self):
+        a = areas_from([(0, 5, 0, 7)])
+        b = areas_from([(5, 10, 0, 7)])
+        out = merge_disjoint(a, b)
+        assert [tuple(r) for r in out.to_records()] == [(0, 10, 0, 7)]
+
+
+# ---------------------------------------------------------------- property
+@st.composite
+def invariant_area_sets(draw, max_n=24, universe=200, max_seq=100):
+    """Areas under the system invariant: all smin at a common GC floor."""
+    n = draw(st.integers(1, max_n))
+    floor = draw(st.integers(0, 5))
+    recs = []
+    for _ in range(n):
+        lo = draw(st.integers(0, universe - 2))
+        hi = draw(st.integers(lo + 1, universe))
+        smax = draw(st.integers(floor + 1, max_seq))
+        recs.append((lo, hi, floor, smax))
+    return AreaSet.from_records(recs)
+
+
+@settings(max_examples=120, deadline=None)
+@given(invariant_area_sets())
+def test_disjointize_matches_oracle(s):
+    got = disjointize(s)
+    want = disjointize_oracle(s)
+    np.testing.assert_array_equal(got.to_records(), want.to_records())
+
+
+@settings(max_examples=120, deadline=None)
+@given(invariant_area_sets(), st.data())
+def test_disjointize_coverage_equivalence(s, data):
+    """Point coverage is preserved exactly (Lemma 4.2 correctness)."""
+    d = disjointize(s)
+    assert d.is_disjoint_sorted()
+    assert len(d) <= 2 * len(s)  # paper's 2x bound
+    keys = np.array(
+        [data.draw(st.integers(0, 201)) for _ in range(32)], dtype=np.uint64)
+    seqs = np.array(
+        [data.draw(st.integers(0, 101)) for _ in range(32)], dtype=np.uint64)
+    np.testing.assert_array_equal(
+        d.covers_batch_bruteforce(keys, seqs),
+        s.covers_batch_bruteforce(keys, seqs))
+
+
+@settings(max_examples=60, deadline=None)
+@given(invariant_area_sets(), invariant_area_sets())
+def test_merge_of_disjoint_sets_coverage(s1, s2):
+    a, b = disjointize(s1), disjointize(s2)
+    m = merge_disjoint(a, b)
+    assert m.is_disjoint_sorted()
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 202, size=64).astype(np.uint64)
+    seqs = rng.integers(0, 102, size=64).astype(np.uint64)
+    both = s1.concat(s2)
+    np.testing.assert_array_equal(m.covers_batch_bruteforce(keys, seqs),
+                                  both.covers_batch_bruteforce(keys, seqs))
+
+
+def test_disjointize_idempotent():
+    s = areas_from([(0, 50, 0, 10), (25, 75, 0, 20), (60, 90, 0, 5)])
+    d1 = disjointize(s)
+    d2 = disjointize(d1)
+    np.testing.assert_array_equal(d1.to_records(), d2.to_records())

@@ -1,0 +1,263 @@
+"""DR-tree, R-tree buffer, LSM-DRtree, EVE, and GloranIndex tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AreaSet, DRTree, EVE, GloranConfig, GloranIndex,
+                        IOStats, LSMDRTree, LSMDRTreeConfig, LSMRTree,
+                        RAEConfig, RTree, disjointize)
+
+
+def areas_from(recs):
+    return AreaSet.from_records(recs)
+
+
+class TestRTree:
+    def test_insert_query(self):
+        t = RTree(max_entries=4)
+        rng = np.random.default_rng(1)
+        recs = []
+        for _ in range(200):
+            lo = int(rng.integers(0, 1000))
+            hi = lo + int(rng.integers(1, 50))
+            smax = int(rng.integers(1, 100))
+            recs.append((lo, hi, 0, smax))
+            t.insert(lo, hi, 0, smax)
+        s = areas_from(recs)
+        for _ in range(200):
+            k = int(rng.integers(0, 1050))
+            q = int(rng.integers(0, 110))
+            assert t.covers(k, q) == s.covers_point_bruteforce(k, q)
+
+    def test_extract_roundtrip(self):
+        t = RTree(max_entries=4)
+        recs = [(i * 10, i * 10 + 5, 0, i + 1) for i in range(50)]
+        for r in recs:
+            t.insert(*r)
+        got = t.extract_all()
+        assert sorted(map(tuple, got.to_records().tolist())) == sorted(recs)
+
+
+class TestDRTree:
+    def _tree(self, n=1000, key_size=16, block_size=4096):
+        lo = np.arange(n, dtype=np.uint64) * 10
+        hi = lo + 5
+        smin = np.zeros(n, dtype=np.uint64)
+        smax = (np.arange(n, dtype=np.uint64) % 50) + 1
+        return DRTree(AreaSet(lo, hi, smin, smax), key_size=key_size,
+                      block_size=block_size)
+
+    def test_probe_cost_is_logarithmic(self):
+        t = self._tree(n=100_000)
+        # leaf_cap = 4096 // 32 = 128 -> 782 leaves -> height 1 + ceil(log_128 782)=3
+        assert t.leaf_cap == 128
+        assert t.height == 3
+        assert t.probe_cost() == 3
+
+    def test_query_correct(self):
+        t = self._tree(n=500)
+        io = IOStats()
+        assert t.query(10, 0, io)  # area [10,15) x [0,2)
+        assert not t.query(10, 2, io)
+        assert not t.query(7, 0, io)  # gap
+        assert io.reads == 3 * t.probe_cost()
+
+    def test_query_batch_matches_scalar(self):
+        t = self._tree(n=300)
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, 3100, size=500).astype(np.uint64)
+        seqs = rng.integers(0, 60, size=500).astype(np.uint64)
+        got = t.query_batch(keys, seqs)
+        want = np.array([t.query(int(k), int(s)) for k, s in zip(keys, seqs)])
+        np.testing.assert_array_equal(got, want)
+
+    def test_gc(self):
+        t = self._tree(n=100)
+        g = t.gc(watermark=25)
+        assert np.all(g.areas.smax > 25)
+        assert np.all(g.areas.smin >= 25)
+
+
+class TestLSMDRTree:
+    def test_flush_and_compaction_levels(self):
+        cfg = LSMDRTreeConfig(buffer_capacity=64, size_ratio=4)
+        t = LSMDRTree(cfg)
+        rng = np.random.default_rng(2)
+        seq = 1
+        for _ in range(2000):
+            lo = int(rng.integers(0, 100_000))
+            t.insert(lo, lo + int(rng.integers(1, 100)), smax=seq)
+            seq += 1
+        assert t.num_records > 0
+        assert len([l for l in t.levels if l is not None]) >= 1
+        assert t.io.writes > 0
+
+    def test_query_matches_bruteforce(self):
+        cfg = LSMDRTreeConfig(buffer_capacity=32, size_ratio=3)
+        t = LSMDRTree(cfg)
+        rng = np.random.default_rng(3)
+        recs = []
+        for seq in range(1, 600):
+            lo = int(rng.integers(0, 5000))
+            hi = lo + int(rng.integers(1, 200))
+            t.insert(lo, hi, smax=seq)
+            recs.append((lo, hi, 0, seq))
+        s = areas_from(recs)
+        keys = rng.integers(0, 5300, size=400).astype(np.uint64)
+        seqs = rng.integers(0, 650, size=400).astype(np.uint64)
+        want = s.covers_batch_bruteforce(keys, seqs)
+        got = np.array([t.covers(int(k), int(q)) for k, q in zip(keys, seqs)])
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(t.covers_batch(keys, seqs), want)
+
+    def test_probe_cost_polylog(self):
+        cfg = LSMDRTreeConfig(buffer_capacity=128, size_ratio=10)
+        t = LSMDRTree(cfg)
+        rng = np.random.default_rng(4)
+        for seq in range(1, 20_001):
+            lo = int(rng.integers(0, 10_000_000))
+            t.insert(lo, lo + 10, smax=seq)
+        # Worst-case probe cost must stay far below the linear record count.
+        assert t.probe_cost() <= 20
+        assert t.num_records >= 15_000  # disjointization may merge a few
+
+    def test_gc_drops_bottom(self):
+        cfg = LSMDRTreeConfig(buffer_capacity=16, size_ratio=2)
+        t = LSMDRTree(cfg)
+        for seq in range(1, 200):
+            t.insert(seq * 100, seq * 100 + 10, smax=seq)
+        before = t.num_records
+        t.gc(watermark=150)
+        assert t.num_records < before
+
+
+class TestLSMRTreeBaseline:
+    def test_query_correct_and_costlier(self):
+        cfg = LSMDRTreeConfig(buffer_capacity=32, size_ratio=3)
+        dr = LSMDRTree(cfg)
+        r = LSMRTree(cfg)
+        rng = np.random.default_rng(5)
+        recs = []
+        # Heavily overlapping areas: the R-tree pathology case.
+        for seq in range(1, 400):
+            lo = int(rng.integers(0, 500))
+            hi = lo + int(rng.integers(50, 300))
+            dr.insert(lo, hi, smax=seq)
+            r.insert(lo, hi, smax=seq)
+            recs.append((lo, hi, 0, seq))
+        s = areas_from(recs)
+        keys = rng.integers(0, 900, size=200).astype(np.uint64)
+        seqs = rng.integers(0, 420, size=200).astype(np.uint64)
+        want = s.covers_batch_bruteforce(keys, seqs)
+        got = np.array([r.covers(int(k), int(q)) for k, q in zip(keys, seqs)])
+        np.testing.assert_array_equal(got, want)
+
+
+class TestEVE:
+    def test_no_false_negatives(self):
+        eve = EVE(RAEConfig(capacity=128, key_universe=1 << 20))
+        rng = np.random.default_rng(6)
+        ranges = []
+        for seq in range(1, 500):  # forces chain growth past 128
+            lo = int(rng.integers(0, (1 << 20) - 200))
+            hi = lo + int(rng.integers(1, 200))
+            eve.insert_range(lo, hi, seq)
+            ranges.append((lo, hi, seq))
+        assert len(eve.chain) > 1
+        for lo, hi, seq in ranges[::7]:
+            k = (lo + hi) // 2
+            # entry written before the delete (entry_seq < seq) MUST flag.
+            assert eve.maybe_deleted(k, seq - 1)
+
+    def test_entries_after_delete_can_skip(self):
+        eve = EVE(RAEConfig(capacity=64, key_universe=1 << 20))
+        eve.insert_range(100, 200, seq=10)
+        # An entry written after every recorded delete cannot be deleted.
+        assert not eve.maybe_deleted(150, entry_seq=10)
+        assert not eve.maybe_deleted(150, entry_seq=999)
+
+    def test_batch_matches_scalar(self):
+        eve = EVE(RAEConfig(capacity=64, key_universe=1 << 16))
+        rng = np.random.default_rng(7)
+        for seq in range(1, 150):
+            lo = int(rng.integers(0, (1 << 16) - 64))
+            eve.insert_range(lo, lo + int(rng.integers(1, 64)), seq)
+        keys = rng.integers(0, 1 << 16, size=300).astype(np.uint64)
+        seqs = rng.integers(0, 160, size=300).astype(np.uint64)
+        got = eve.maybe_deleted_batch(keys, seqs)
+        want = np.array(
+            [eve.maybe_deleted(int(k), int(s)) for k, s in zip(keys, seqs)])
+        np.testing.assert_array_equal(got, want)
+
+    def test_fpr_reasonable(self):
+        # Keys far from any deleted range should mostly probe negative.
+        eve = EVE(RAEConfig(capacity=4096, bits_per_record=10,
+                            key_universe=1 << 30))
+        rng = np.random.default_rng(8)
+        for seq in range(1, 2000):
+            lo = int(rng.integers(0, 1 << 29))
+            eve.insert_range(lo, lo + 100, seq)
+        probes = rng.integers(1 << 29, 1 << 30, size=4000).astype(np.uint64)
+        fp = eve.maybe_deleted_batch(probes, np.zeros(4000, dtype=np.uint64))
+        assert fp.mean() < 0.25
+
+    def test_gc_drops_old_raes(self):
+        eve = EVE(RAEConfig(capacity=8, key_universe=1 << 16))
+        for seq in range(1, 40):
+            eve.insert_range(seq * 10, seq * 10 + 5, seq)
+        n0 = len(eve.chain)
+        eve.gc(watermark=39)
+        assert len(eve.chain) < n0
+
+
+class TestGloranIndex:
+    def test_end_to_end_validity(self):
+        g = GloranIndex(GloranConfig(
+            index=LSMDRTreeConfig(buffer_capacity=32, size_ratio=3),
+            eve=RAEConfig(capacity=64, key_universe=1 << 20)))
+        rng = np.random.default_rng(9)
+        deletes = []
+        seq = 0
+        for _ in range(300):
+            seq += 1
+            lo = int(rng.integers(0, 50_000))
+            hi = lo + int(rng.integers(1, 500))
+            g.range_delete(lo, hi, seq)
+            deletes.append((lo, hi, 0, seq))
+        s = areas_from(deletes)
+        keys = rng.integers(0, 51_000, size=500).astype(np.uint64)
+        seqs = rng.integers(0, 320, size=500).astype(np.uint64)
+        want = s.covers_batch_bruteforce(keys, seqs)
+        got = np.array([g.is_deleted(int(k), int(q))
+                        for k, q in zip(keys, seqs)])
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(g.is_deleted_batch(keys, seqs), want)
+
+    def test_eve_saves_index_probes(self):
+        g_eve = GloranIndex(GloranConfig(
+            index=LSMDRTreeConfig(buffer_capacity=64),
+            eve=RAEConfig(capacity=4096, key_universe=1 << 30)))
+        g_raw = GloranIndex(GloranConfig(
+            index=LSMDRTreeConfig(buffer_capacity=64), use_eve=False))
+        rng = np.random.default_rng(10)
+        for seq in range(1, 1000):
+            lo = int(rng.integers(0, 1 << 29))
+            g_eve.range_delete(lo, lo + 50, seq)
+            g_raw.range_delete(lo, lo + 50, seq)
+        r0_eve, r0_raw = g_eve.io.reads, g_raw.io.reads
+        # Valid lookups far away from deletes: EVE should skip the index.
+        for k in rng.integers(1 << 29, 1 << 30, size=200):
+            g_eve.is_deleted(int(k), 2000)
+            g_raw.is_deleted(int(k), 2000)
+        assert (g_eve.io.reads - r0_eve) < (g_raw.io.reads - r0_raw)
+
+    def test_gc_floor_correctness_after_update(self):
+        """The paper's §4.1 hazard: key updated after a range delete must
+        stay visible."""
+        g = GloranIndex(GloranConfig(
+            index=LSMDRTreeConfig(buffer_capacity=8),
+            eve=RAEConfig(capacity=16, key_universe=1 << 16)))
+        g.range_delete(5, 15, seq=8)
+        assert g.is_deleted(8, entry_seq=5)  # old entry: dead
+        assert not g.is_deleted(8, entry_seq=9)  # re-inserted after: live

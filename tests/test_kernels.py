@@ -1,0 +1,200 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle vs
+host numpy, across shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.eve import BloomBits, fold64to32
+from repro.kernels.bloom.ops import bloom_probe
+from repro.kernels.bloom.ref import bloom_probe_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.interval.ops import interval_query
+from repro.kernels.interval.ref import interval_query_ref
+from repro.kernels.ssd.ops import ssd_chunked_scan
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_ref
+
+
+# --------------------------------------------------------------- bloom
+@pytest.mark.parametrize("m_bits,n_hashes,n_keys", [
+    (1 << 10, 4, 100), (1 << 14, 6, 1000), (1 << 16, 7, 5000),
+])
+def test_bloom_kernel_matches_host_filter(m_bits, n_hashes, n_keys):
+    rng = np.random.default_rng(m_bits)
+    bb = BloomBits(m_bits, n_hashes, seed=0x5EED)
+    inserted = rng.integers(0, 1 << 62, size=n_keys).astype(np.uint64)
+    bb.insert(inserted)
+    probes = np.concatenate([
+        inserted[: n_keys // 2],
+        rng.integers(0, 1 << 62, size=n_keys).astype(np.uint64)])
+    want = bb.might_contain(probes)
+    keys32 = fold64to32(probes)
+    got = np.asarray(bloom_probe(keys32, bb.words, m_bits=bb.m_bits,
+                                 seeds=tuple(int(s) for s in bb.seeds)))
+    np.testing.assert_array_equal(got, want)
+    ref = np.asarray(bloom_probe_ref(jnp.asarray(keys32), jnp.asarray(
+        bb.words), m_bits=bb.m_bits,
+        seeds=tuple(int(s) for s in bb.seeds))).astype(bool)
+    np.testing.assert_array_equal(ref, want)
+
+
+def test_bloom_kernel_no_false_negatives():
+    bb = BloomBits(1 << 12, 5)
+    keys = np.arange(1, 500, dtype=np.uint64) * np.uint64(2654435761)
+    bb.insert(keys)
+    got = np.asarray(bloom_probe(fold64to32(keys), bb.words,
+                                 m_bits=bb.m_bits,
+                                 seeds=tuple(int(s) for s in bb.seeds)))
+    assert got.all()
+
+
+def test_bloom_chunked_path():
+    from repro.kernels.bloom import ops as bops
+    old = bops.MAX_WORDS_PER_CALL
+    bops.MAX_WORDS_PER_CALL = 32  # force chunking
+    try:
+        bb = BloomBits(1 << 12, 4)  # 128 words -> 4 chunks
+        keys = np.arange(1, 300, dtype=np.uint64) * np.uint64(11400714819)
+        bb.insert(keys)
+        probes = np.concatenate([keys, keys + np.uint64(1)])
+        want = bb.might_contain(probes)
+        got = np.asarray(bloom_probe(fold64to32(probes), bb.words,
+                                     m_bits=bb.m_bits,
+                                     seeds=tuple(int(s) for s in bb.seeds)))
+        np.testing.assert_array_equal(got, want)
+    finally:
+        bops.MAX_WORDS_PER_CALL = old
+
+
+# ------------------------------------------------------------- interval
+def _random_disjoint(rng, n, universe=1 << 30, max_seq=1 << 20):
+    los = np.sort(rng.choice(universe, size=2 * n, replace=False)
+                  .astype(np.uint32))
+    lo, hi = los[0::2], los[1::2]
+    smax = rng.integers(1, max_seq, size=n).astype(np.uint32)
+    smin = (smax * rng.random(n) * 0.5).astype(np.uint32)
+    return lo, hi, smin, smax
+
+
+@pytest.mark.parametrize("n_areas,n_queries", [(1, 64), (37, 500),
+                                               (1024, 4096), (4097, 1000)])
+def test_interval_kernel_matches_oracle(n_areas, n_queries):
+    rng = np.random.default_rng(n_areas)
+    lo, hi, smin, smax = _random_disjoint(rng, n_areas)
+    keys = rng.integers(0, 1 << 30, size=n_queries).astype(np.uint32)
+    # Half the probes land inside known intervals.
+    pick = rng.integers(0, n_areas, size=n_queries // 2)
+    keys[: n_queries // 2] = (lo[pick] + (hi[pick] - lo[pick]) // 2)
+    seqs = rng.integers(0, 1 << 20, size=n_queries).astype(np.uint32)
+    got = np.asarray(interval_query(keys, seqs, lo, hi, smin, smax))
+    want = np.asarray(interval_query_ref(
+        jnp.asarray(keys), jnp.asarray(seqs), jnp.asarray(lo),
+        jnp.asarray(hi), jnp.asarray(smin), jnp.asarray(smax))).astype(bool)
+    np.testing.assert_array_equal(got, want)
+    # And against the numpy brute force.
+    brute = ((lo[None, :] <= keys[:, None]) & (keys[:, None] < hi[None, :])
+             & (smin[None, :] <= seqs[:, None])
+             & (seqs[:, None] < smax[None, :])).any(axis=1)
+    np.testing.assert_array_equal(got, brute)
+
+
+def test_interval_chunked_path():
+    from repro.kernels.interval import ops as iops
+    old = iops.MAX_AREAS_PER_CALL
+    iops.MAX_AREAS_PER_CALL = 64
+    try:
+        rng = np.random.default_rng(0)
+        lo, hi, smin, smax = _random_disjoint(rng, 300)
+        keys = rng.integers(0, 1 << 30, size=777).astype(np.uint32)
+        seqs = rng.integers(0, 1 << 20, size=777).astype(np.uint32)
+        got = np.asarray(interval_query(keys, seqs, lo, hi, smin, smax))
+        brute = ((lo[None] <= keys[:, None]) & (keys[:, None] < hi[None])
+                 & (smin[None] <= seqs[:, None])
+                 & (seqs[:, None] < smax[None])).any(axis=1)
+        np.testing.assert_array_equal(got, brute)
+    finally:
+        iops.MAX_AREAS_PER_CALL = old
+
+
+# ------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,skv,hq,hkv,d,causal,window", [
+    (1, 128, 128, 4, 4, 64, True, None),      # MHA causal
+    (2, 256, 256, 8, 2, 64, True, None),      # GQA 4:1
+    (1, 128, 128, 4, 1, 128, True, 64),       # MQA + sliding window
+    (2, 100, 100, 4, 2, 64, True, None),      # non-multiple seq (padding)
+    (1, 64, 320, 4, 2, 64, True, None),       # decode-style suffix align
+    (1, 128, 128, 4, 4, 64, False, None),     # non-causal
+])
+def test_flash_attention_matches_ref(b, sq, skv, hq, hkv, d, causal, window,
+                                     dtype):
+    rng = np.random.default_rng(sq + skv + hq)
+    q = jnp.asarray(rng.standard_normal((b, sq, hq, d)), dtype=dtype)
+    k = jnp.asarray(rng.standard_normal((b, skv, hkv, d)), dtype=dtype)
+    v = jnp.asarray(rng.standard_normal((b, skv, hkv, d)), dtype=dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol,
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_flash_attention_window_equals_masked_full():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 192, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 192, 4, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 192, 4, 64)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=32, block_q=64,
+                          block_k=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ------------------------------------------------------------------ ssd
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 8, 16), (2, 128, 4, 32, 16, 32), (1, 256, 2, 64, 32, 64),
+])
+def test_ssd_chunked_ref_matches_quadratic(b, s, h, p, n, chunk):
+    rng = np.random.default_rng(s + h)
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, h)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random(h) - 0.1, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    want = ssd_ref(x, dt, A, B, C)
+    got = ssd_chunked_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 8, 16), (2, 128, 2, 32, 16, 32),
+])
+def test_ssd_kernel_matches_ref(b, s, h, p, n, chunk):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, h)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random(h) - 0.1, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    want = ssd_chunked_ref(x, dt, A, B, C, chunk=chunk)
+    got = ssd_chunked_scan(x, dt, A, B, C, chunk=chunk, use_kernel=True,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssd_grad_flows_through_ref():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+    dt = jnp.asarray(rng.random((1, 32, 2)) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(-rng.random(2) - 0.1, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((1, 32, 8)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((1, 32, 8)), jnp.float32)
+    g = jax.grad(lambda xx: ssd_chunked_ref(xx, dt, A, B, C,
+                                            chunk=16).sum())(x)
+    assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,195 @@
+"""LSM-tree substrate: model-based correctness across all range-delete
+strategies + the paper's headline I/O behavior."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GloranConfig, LSMDRTreeConfig, RAEConfig
+from repro.lsm import LSMConfig, LSMTree, STRATEGIES
+
+
+def small_cfg(**kw):
+    d = dict(buffer_capacity=64, size_ratio=3, key_size=16, value_size=48,
+             block_size=512)
+    d.update(kw)
+    return LSMConfig(**d)
+
+
+def small_gloran():
+    return GloranConfig(index=LSMDRTreeConfig(buffer_capacity=16,
+                                              size_ratio=3, key_size=16,
+                                              block_size=512),
+                        eve=RAEConfig(capacity=64, key_universe=1 << 20))
+
+
+class Model:
+    """Reference semantics: a dict + applied range deletes."""
+
+    def __init__(self):
+        self.d = {}
+
+    def put(self, k, v):
+        self.d[k] = v
+
+    def delete(self, k):
+        self.d.pop(k, None)
+
+    def range_delete(self, lo, hi):
+        for k in [k for k in self.d if lo <= k < hi]:
+            del self.d[k]
+
+    def get(self, k):
+        return self.d.get(k)
+
+    def scan(self, lo, hi):
+        return sorted((k, v) for k, v in self.d.items() if lo <= k < hi)
+
+
+def run_ops(strategy, ops):
+    t = LSMTree(small_cfg(), strategy=strategy,
+                gloran_config=small_gloran() if strategy == "gloran" else None)
+    m = Model()
+    for op in ops:
+        if op[0] == "put":
+            t.put(op[1], op[2])
+            m.put(op[1], op[2])
+        elif op[0] == "del":
+            t.delete(op[1])
+            m.delete(op[1])
+        elif op[0] == "rdel":
+            t.range_delete(op[1], op[2])
+            m.range_delete(op[1], op[2])
+    return t, m
+
+
+def make_ops(rng, n, universe=2000, rdel_ratio=0.05, max_len=100):
+    ops = []
+    for _ in range(n):
+        r = rng.random()
+        if r < rdel_ratio:
+            lo = int(rng.integers(0, universe - 2))
+            hi = lo + int(rng.integers(1, max_len))
+            ops.append(("rdel", lo, hi))
+        elif r < rdel_ratio + 0.05:
+            ops.append(("del", int(rng.integers(0, universe))))
+        else:
+            k = int(rng.integers(0, universe))
+            ops.append(("put", k, int(rng.integers(1, 1 << 30))))
+    return ops
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_model_equivalence_point_lookups(strategy):
+    rng = np.random.default_rng(42)
+    ops = make_ops(rng, 1500)
+    t, m = run_ops(strategy, ops)
+    probe = rng.integers(0, 2100, size=600)
+    for k in probe.tolist():
+        assert t.get(k) == m.get(k), f"{strategy}: key {k}"
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_model_equivalence_batch_lookups(strategy):
+    rng = np.random.default_rng(7)
+    ops = make_ops(rng, 1200, rdel_ratio=0.08)
+    t, m = run_ops(strategy, ops)
+    keys = rng.integers(0, 2100, size=800).astype(np.uint64)
+    found, vals = t.get_batch(keys)
+    for j, k in enumerate(keys.tolist()):
+        want = m.get(k)
+        assert found[j] == (want is not None), f"{strategy}: key {k}"
+        if want is not None:
+            assert vals[j] == want
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_model_equivalence_range_scan(strategy):
+    rng = np.random.default_rng(11)
+    ops = make_ops(rng, 1200, rdel_ratio=0.06)
+    t, m = run_ops(strategy, ops)
+    for _ in range(25):
+        lo = int(rng.integers(0, 1900))
+        hi = lo + int(rng.integers(1, 300))
+        ks, vs = t.range_scan(lo, hi)
+        got = sorted(zip(ks.tolist(), vs.tolist()))
+        assert got == m.scan(lo, hi), f"{strategy}: [{lo},{hi})"
+
+
+def test_compaction_reclaims_space():
+    t, m = run_ops("gloran", make_ops(np.random.default_rng(1), 3000,
+                                      universe=500, rdel_ratio=0.1))
+    # After enough compactions, dead entries must be bounded.
+    assert t.num_entries < 3 * max(1, len(m.d)) + t.config.buffer_capacity * 4
+
+
+def test_gloran_gc_advances_floor():
+    t, _ = run_ops("gloran", make_ops(np.random.default_rng(2), 4000,
+                                      universe=800, rdel_ratio=0.1))
+    assert t.gloran.gc_floor > 0  # bottom compactions happened
+
+
+def test_paper_headline_lookup_io():
+    """§3: with range deletes, LRR point lookups pay >= 1 I/O per level for
+    rt blocks + linear tombstone scans; GLORAN decouples that."""
+    rng = np.random.default_rng(3)
+    ops = make_ops(rng, 4000, universe=100_000, rdel_ratio=0.05, max_len=200)
+    t_lrr, _ = run_ops("lrr", ops)
+    t_glo, _ = run_ops("gloran", ops)
+    keys = rng.integers(0, 100_000, size=500).astype(np.uint64)
+    r0 = t_lrr.io.reads
+    t_lrr.get_batch(keys)
+    lrr_reads = t_lrr.io.reads - r0
+    r0 = t_glo.io.reads
+    t_glo.get_batch(keys)
+    glo_reads = t_glo.io.reads - r0
+    assert glo_reads < lrr_reads, (glo_reads, lrr_reads)
+
+
+def test_nonexistent_keys_skip_global_index():
+    """Table 2 Lookup(N): absent keys never touch the LSM-DRtree."""
+    t = LSMTree(small_cfg(), strategy="gloran",
+                gloran_config=small_gloran())
+    for k in range(0, 2000, 2):
+        t.put(k, k + 1)
+    for s in range(5):
+        t.range_delete(s * 100, s * 100 + 50)
+    idx_reads0 = t.gloran.io.by_tag.get("drtree_probe", 0)
+    # Odd keys above the data: non-existent.
+    for k in range(100_001, 100_200, 2):
+        assert t.get(k) is None
+    assert t.gloran.io.by_tag.get("drtree_probe", 0) == idx_reads0
+
+
+def test_update_after_range_delete_visible():
+    """§4.1 temporal-correctness hazard."""
+    for strategy in STRATEGIES:
+        t = LSMTree(small_cfg(), strategy=strategy,
+                    gloran_config=small_gloran()
+                    if strategy == "gloran" else None)
+        t.put(8, 100)
+        t.range_delete(5, 15)
+        assert t.get(8) is None
+        t.put(8, 200)  # re-insert AFTER the range delete
+        assert t.get(8) == 200, strategy
+        t.flush()
+        assert t.get(8) == 200, strategy
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["put", "del", "rdel"]),
+                          st.integers(0, 300), st.integers(1, 60)),
+                min_size=1, max_size=120),
+       st.sampled_from(["lrr", "gloran"]))
+def test_property_lsm_matches_model(raw_ops, strategy):
+    ops = []
+    for kind, a, b in raw_ops:
+        if kind == "put":
+            ops.append(("put", a, b))
+        elif kind == "del":
+            ops.append(("del", a))
+        else:
+            ops.append(("rdel", a, a + b))
+    t, m = run_ops(strategy, ops)
+    for k in range(0, 310, 7):
+        assert t.get(k) == m.get(k), (strategy, k)

@@ -1,0 +1,54 @@
+"""Step-builder layer: input_specs / cache geometry / rule adjustment for
+every (arch x shape) cell — fast (eval_shape only, no mesh, no compile)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.steps import input_specs, serve_cache_len
+from repro.models import Transformer
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_all_cells(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        pytest.skip("full-attention arch skips long_500k (DESIGN.md)")
+    model = Transformer(cfg)
+    specs = input_specs(cfg, shape, model)
+    if shape.kind == "train":
+        key = "embeds" if cfg.stub_frontend else "tokens"
+        assert specs[key].shape[:2] == (shape.global_batch, shape.seq_len)
+        assert specs["labels"].shape == (shape.global_batch, shape.seq_len)
+    elif shape.kind == "prefill":
+        key = "embeds" if cfg.stub_frontend else "tokens"
+        assert specs[key].shape[:2] == (shape.global_batch, shape.seq_len)
+    else:
+        cache_len, ring = serve_cache_len(cfg, shape)
+        assert specs["token"].shape[0] == shape.global_batch
+        assert specs["token"].shape[1] == 1
+        leaves = jax.tree.leaves(specs["cache"])
+        assert leaves, "decode needs a cache"
+        if ring:
+            assert cache_len < shape.seq_len  # window-bounded ring buffer
+        # no allocation happened: everything is ShapeDtypeStruct
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in
+                   jax.tree.leaves(specs))
+
+
+def test_ring_cache_only_for_swa():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        _, ring = serve_cache_len(cfg, SHAPES["decode_32k"])
+        expect = cfg.window is not None and cfg.local_global is None \
+            and cfg.family != "hybrid"
+        assert ring == expect, arch
+
+
+def test_hybrid_long_mode_windows_shared_attention():
+    cfg = get_config("zamba2-7b")
+    n, ring = serve_cache_len(cfg, SHAPES["long_500k"])
+    assert ring and n == 4096
