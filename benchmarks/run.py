@@ -10,8 +10,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig9_throughput, fig10_range_length, fig11_sizes,
-               fig13_eve_fpr, fig13_index, kernels_bench,
+from . import (engine_bench, fig9_throughput, fig10_range_length,
+               fig11_sizes, fig13_eve_fpr, fig13_index, kernels_bench,
                table2_complexity, table3_range_lookup)
 from .harness import ROWS
 
@@ -24,6 +24,7 @@ MODULES = {
     "fig13_eve": fig13_eve_fpr,
     "table345": table3_range_lookup,
     "kernels": kernels_bench,
+    "engine": engine_bench,
 }
 
 

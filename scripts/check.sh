@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Local verification: tier-1 tests + a ~10 s engine benchmark smoke so
+# batched-lookup throughput drift is caught before it lands.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+REPRO_ENGINE_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_engine_smoke.json \
+    python benchmarks/engine_bench.py
+
+python - <<'EOF'
+import json
+d = json.load(open("/tmp/BENCH_engine_smoke.json"))
+s = d["acceptance"]["min_speedup_4shard_batch_ge_1024"]
+assert s is not None and s >= 2.0, \
+    f"engine speedup regressed: {s}x < 2x vs per-key loop"
+print(f"check OK: 4-shard batched lookups {s}x vs per-key loop")
+EOF

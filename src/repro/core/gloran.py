@@ -70,7 +70,11 @@ class GloranIndex:
         return self.index.covers(key, entry_seq)
 
     def is_deleted_batch(self, keys: np.ndarray,
-                         entry_seqs: np.ndarray) -> np.ndarray:
+                         entry_seqs: np.ndarray,
+                         query_fn=None) -> np.ndarray:
+        """Batched validity probe.  ``query_fn`` optionally replaces how
+        individual LSM-DRtree levels are probed (see
+        ``LSMDRTree.covers_batch``); other index kinds ignore it."""
         keys = np.asarray(keys, dtype=np.uint64)
         entry_seqs = np.asarray(entry_seqs, dtype=np.uint64)
         if self.eve is not None:
@@ -79,7 +83,10 @@ class GloranIndex:
             maybe = np.ones(len(keys), dtype=bool)
         out = np.zeros(len(keys), dtype=bool)
         if maybe.any():
-            if hasattr(self.index, "covers_batch"):
+            if query_fn is not None and isinstance(self.index, LSMDRTree):
+                out[maybe] = self.index.covers_batch(
+                    keys[maybe], entry_seqs[maybe], query_fn=query_fn)
+            elif hasattr(self.index, "covers_batch"):
                 out[maybe] = self.index.covers_batch(keys[maybe],
                                                      entry_seqs[maybe])
             else:
@@ -105,7 +112,9 @@ class GloranIndex:
     @property
     def memory_bytes(self) -> int:
         eve = self.eve.nbytes if self.eve is not None else 0
-        buf = self.index.buffer.size * 2 * self.config.index.key_size
+        # The write buffer keeps all four record fields (lo, hi, smin, smax)
+        # resident; each is key-sized in the paper's model.
+        buf = self.index.buffer.size * 4 * self.config.index.key_size
         return eve + buf
 
     @property

@@ -102,7 +102,11 @@ class LSMDRTree:
                 return True
         return False
 
-    def covers_batch(self, keys: np.ndarray, seqs: np.ndarray) -> np.ndarray:
+    def covers_batch(self, keys: np.ndarray, seqs: np.ndarray,
+                     query_fn=None) -> np.ndarray:
+        """Batched point stabbing.  ``query_fn(level, keys, seqs, io)``
+        optionally replaces HOW a level is probed (e.g. the Pallas
+        interval kernel); charging stays the level's responsibility."""
         keys = np.asarray(keys, dtype=np.uint64)
         seqs = np.asarray(seqs, dtype=np.uint64)
         out = np.zeros(len(keys), dtype=bool)
@@ -114,8 +118,12 @@ class LSMDRTree:
                 todo = ~out
                 if not todo.any():
                     break
-                out[todo] = lvl.query_batch(keys[todo], seqs[todo],
-                                            io=self.io)
+                if query_fn is not None:
+                    out[todo] = query_fn(lvl, keys[todo], seqs[todo],
+                                         self.io)
+                else:
+                    out[todo] = lvl.query_batch(keys[todo], seqs[todo],
+                                                io=self.io)
         return out
 
     def probe_cost(self) -> int:
@@ -149,8 +157,11 @@ class LSMDRTree:
 
     @property
     def nbytes(self) -> int:
-        return sum(l.nbytes for l in self.levels if l is not None) + \
-            self.buffer.size * 2 * self.config.key_size
+        """On-disk footprint: serialized levels only (2k per record, the
+        paper's model).  The in-memory write buffer is charged — at its
+        full four-field in-memory width — by ``GloranIndex.memory_bytes``,
+        never as disk."""
+        return sum(l.nbytes for l in self.levels if l is not None)
 
     def all_areas(self) -> AreaSet:
         out = self.buffer.extract_all()
@@ -226,6 +237,33 @@ class LSMRTree:
             if hit:
                 break
         return hit
+
+    def covers_batch(self, keys: np.ndarray, seqs: np.ndarray) -> np.ndarray:
+        """Batched point stabbing across the buffer and every R-tree level.
+
+        Each level descends once for the still-undecided queries (newest
+        levels first, early-exiting covered queries like ``covers``), and
+        charges the descent's node visits as random block I/Os — the
+        overlap pathology stays visible in the ledger.
+        """
+        keys = np.asarray(keys, dtype=np.uint64)
+        seqs = np.asarray(seqs, dtype=np.uint64)
+        out = np.zeros(len(keys), dtype=bool)
+        if len(keys) == 0:
+            return out
+        if self.buffer.size:
+            out |= self.buffer.covers_batch(keys, seqs)
+        for lvl in self.levels:
+            if lvl is None:
+                continue
+            todo = ~out
+            if not todo.any():
+                break
+            tree, _ = lvl
+            v0 = tree.node_visits
+            out[todo] = tree.covers_batch(keys[todo], seqs[todo])
+            self.io.read_blocks(tree.node_visits - v0, tag="rtree_probe")
+        return out
 
     @property
     def num_records(self) -> int:

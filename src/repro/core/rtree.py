@@ -140,6 +140,47 @@ class RTree:
         return any(self._covers(c, key, seq) for c in node.entries
                    if _contains_point(c.mbr, key, seq))
 
+    def covers_batch(self, keys: np.ndarray, seqs: np.ndarray) -> np.ndarray:
+        """Vectorized point stabbing for a batch of (key, seq) queries.
+
+        Descends the tree once with index masks instead of once per query;
+        ``node_visits`` advances by the number of still-undecided queries
+        reaching each node, mirroring the per-query descent cost that the
+        GLORAN0 I/O accounting is built on.
+        """
+        keys = np.asarray(keys, dtype=np.uint64)
+        seqs = np.asarray(seqs, dtype=np.uint64)
+        out = np.zeros(len(keys), dtype=bool)
+        if len(keys) == 0:
+            return out
+        stack = [(self.root, np.arange(len(keys)))]
+        while stack:
+            node, idx = stack.pop()
+            idx = idx[~out[idx]]  # short-circuit queries already covered
+            if len(idx) == 0:
+                continue
+            self.node_visits += len(idx)
+            if node.mbr is None:
+                continue
+            lo, hi, smin, smax = node.mbr
+            k, s = keys[idx], seqs[idx]
+            inside = (k >= lo) & (k < hi) & (s >= smin) & (s < smax)
+            idx = idx[inside]
+            if len(idx) == 0:
+                continue
+            k, s = keys[idx], seqs[idx]
+            if node.leaf:
+                for r in node.entries:
+                    hit = (k >= r[0]) & (k < r[1]) & (s >= r[2]) & (s < r[3])
+                    out[idx[hit]] = True
+            else:
+                for child in node.entries:
+                    clo, chi, csmin, csmax = child.mbr
+                    m = (k >= clo) & (k < chi) & (s >= csmin) & (s < csmax)
+                    if m.any():
+                        stack.append((child, idx[m]))
+        return out
+
     def visits_for(self, key: int, seq: int) -> int:
         """Node visits for a single query (the Fig. 13a metric)."""
         before = self.node_visits

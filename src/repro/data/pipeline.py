@@ -53,13 +53,18 @@ class TokenPipeline:
             glob = rng.standard_normal(
                 (cfg.global_batch, cfg.seq_len, cfg.d_model),
                 dtype=np.float32)
+            labels = rng.integers(0, cfg.vocab,
+                                  size=(cfg.global_batch, cfg.seq_len),
+                                  dtype=np.int32)
         else:
             glob = rng.integers(0, cfg.vocab,
                                 size=(cfg.global_batch, cfg.seq_len),
                                 dtype=np.int32)
-        labels = rng.integers(0, cfg.vocab,
-                              size=(cfg.global_batch, cfg.seq_len),
-                              dtype=np.int32)
+            # Labels are a fixed bijection of the tokens: a learnable
+            # stand-in for next-token targets.  (Independent random labels
+            # would make the irreducible loss ln(vocab) — nothing to
+            # learn, so training smoke tests could only pass by noise.)
+            labels = (glob + 1) % cfg.vocab
         lo = cfg.host_id * self.host_batch
         hi = lo + self.host_batch
         self.step += 1

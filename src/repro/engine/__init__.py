@@ -1,0 +1,18 @@
+"""repro.engine: sharded, batched query execution over LSM-tree shards.
+
+The layer between the serving runtime and the storage substrate: routes
+vectorized op batches across N ``LSMTree`` shards, executes point-lookup
+batches through the fused Pallas filter stage (Bloom + DR-tree interval
+kernels), charges I/O through a read-through block cache, and rolls
+per-shard ledgers up into engine-level stats.
+"""
+
+from .cache import BlockCache
+from .engine import Engine
+from .executor import EngineConfig, ShardExecutor
+from .router import ShardRouter
+from .stats import EngineStats, KernelCounters, merge_io_snapshots
+
+__all__ = ["BlockCache", "Engine", "EngineConfig", "ShardExecutor",
+           "ShardRouter", "EngineStats", "KernelCounters",
+           "merge_io_snapshots"]

@@ -1,0 +1,201 @@
+"""Sharded batched query engine fronting N LSM-tree shards.
+
+The serving tier's execution layer: a ``ShardRouter`` partitions batches
+of operations across hash- or range-partitioned ``LSMTree`` shards, each
+shard runs its ``ShardExecutor`` batched read path (Bloom + interval
+Pallas kernels, block cache), and results are merged back in request
+order.  ``num_shards=1`` degenerates to a single tree with the batched
+path — the drop-in replacement for calling the tree directly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..core.gloran import GloranConfig
+from ..lsm import LSMConfig, LSMTree
+from .executor import EngineConfig, ShardExecutor
+from .router import ShardRouter
+from .stats import EngineStats, KernelCounters, merge_io_snapshots
+
+
+class Engine:
+    def __init__(self, num_shards: int = 1, strategy: str = "gloran",
+                 lsm_config: LSMConfig | None = None,
+                 gloran_config: GloranConfig | None = None,
+                 config: EngineConfig | None = None):
+        self.config = config or EngineConfig()
+        self.num_shards = int(num_shards)
+        base = lsm_config or LSMConfig()
+        self.router = ShardRouter(self.num_shards,
+                                  partition=self.config.partition,
+                                  universe=base.key_universe)
+        self.shards = []
+        for _ in range(self.num_shards):
+            tree = LSMTree(base, strategy=strategy,
+                           gloran_config=gloran_config)
+            self.shards.append(ShardExecutor(tree, self.config))
+        self.stats_ = EngineStats()
+
+    # ------------------------------------------------------------ writes
+    def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        keys = np.asarray(keys, dtype=np.uint64)
+        vals = np.asarray(vals, dtype=np.uint64)
+        t0 = time.perf_counter()
+        for s, idx in enumerate(self.router.split(keys)):
+            if len(idx):
+                self.shards[s].put_batch(keys[idx], vals[idx])
+        self.stats_.record("put", len(keys), time.perf_counter() - t0)
+
+    def put(self, key: int, val: int) -> None:
+        self.put_batch(np.asarray([key], np.uint64),
+                       np.asarray([val], np.uint64))
+
+    def delete_batch(self, keys: np.ndarray) -> None:
+        keys = np.asarray(keys, dtype=np.uint64)
+        t0 = time.perf_counter()
+        for s, idx in enumerate(self.router.split(keys)):
+            if len(idx):
+                self.shards[s].delete_batch(keys[idx])
+        self.stats_.record("delete", len(keys), time.perf_counter() - t0)
+
+    def delete(self, key: int) -> None:
+        self.delete_batch(np.asarray([key], np.uint64))
+
+    def range_delete(self, lo: int, hi: int) -> None:
+        t0 = time.perf_counter()
+        for s, c_lo, c_hi in self.router.shards_for_range(lo, hi):
+            self.shards[s].range_delete(c_lo, c_hi)
+        self.stats_.record("range_delete", 1, time.perf_counter() - t0)
+
+    def flush(self) -> None:
+        for sh in self.shards:
+            sh.flush()
+
+    # ------------------------------------------------------------- reads
+    def get_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized point lookups; results in request order."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        t0 = time.perf_counter()
+        found = np.zeros(len(keys), dtype=bool)
+        vals = np.zeros(len(keys), dtype=np.uint64)
+        for s, idx in enumerate(self.router.split(keys)):
+            if len(idx) == 0:
+                continue
+            f, v = self.shards[s].get_batch(keys[idx])
+            found[idx] = f
+            vals[idx] = v
+        self.stats_.record("get", len(keys), time.perf_counter() - t0)
+        return found, vals
+
+    def get(self, key: int):
+        found, vals = self.get_batch(np.asarray([key], np.uint64))
+        return int(vals[0]) if found[0] else None
+
+    def range_scan(self, lo: int, hi: int):
+        """All live entries in [lo, hi) across shards, sorted by key."""
+        t0 = time.perf_counter()
+        parts = [self.shards[s].range_scan(c_lo, c_hi)
+                 for s, c_lo, c_hi in self.router.shards_for_range(lo, hi)]
+        keys = np.concatenate([p[0] for p in parts]) if parts else \
+            np.zeros(0, np.uint64)
+        vals = np.concatenate([p[1] for p in parts]) if parts else \
+            np.zeros(0, np.uint64)
+        order = np.argsort(keys, kind="stable")
+        self.stats_.record("range_scan", 1, time.perf_counter() - t0)
+        return keys[order], vals[order]
+
+    # --------------------------------------------------------- mixed ops
+    def execute(self, ops: list[tuple]) -> list:
+        """Execute a mixed op batch; results align with request order.
+
+        ``ops`` entries: ``("put", key, val)``, ``("delete", key)``,
+        ``("get", key)``, ``("range_delete", lo, hi)``.  Returns one slot
+        per op: gets yield value-or-None, writes yield None.  Consecutive
+        same-kind ops destined for the same shard execute as one
+        vectorized sub-batch; per-shard arrival order (all that matters —
+        a key's history lives on one shard) is preserved.
+        """
+        results: list = [None] * len(ops)
+        per_shard: list[list[tuple]] = [[] for _ in range(self.num_shards)]
+        for i, op in enumerate(ops):
+            kind = op[0]
+            if kind in ("put", "delete", "get"):
+                per_shard[self.router.shard_of_scalar(op[1])].append(
+                    (i, op))
+            elif kind == "range_delete":
+                for s, lo, hi in self.router.shards_for_range(op[1], op[2]):
+                    per_shard[s].append((i, ("range_delete", lo, hi)))
+            else:
+                raise ValueError(f"unknown op kind: {kind!r}")
+        t0 = time.perf_counter()
+        for s, stream in enumerate(per_shard):
+            sh = self.shards[s]
+            j = 0
+            while j < len(stream):
+                kind = stream[j][1][0]
+                k = j
+                while k < len(stream) and stream[k][1][0] == kind:
+                    k += 1
+                group = stream[j:k]
+                if kind == "put":
+                    sh.put_batch(
+                        np.asarray([g[1][1] for g in group], np.uint64),
+                        np.asarray([g[1][2] for g in group], np.uint64))
+                elif kind == "delete":
+                    sh.delete_batch(
+                        np.asarray([g[1][1] for g in group], np.uint64))
+                elif kind == "get":
+                    f, v = sh.get_batch(
+                        np.asarray([g[1][1] for g in group], np.uint64))
+                    for (i, _), fi, vi in zip(group, f.tolist(), v.tolist()):
+                        results[i] = vi if fi else None
+                else:  # range_delete (already clipped per shard)
+                    for _, (_, lo, hi) in group:
+                        sh.range_delete(lo, hi)
+                j = k
+        self.stats_.record("mixed", len(ops), time.perf_counter() - t0)
+        return results
+
+    # -------------------------------------------------------------- misc
+    @property
+    def io_reads(self) -> int:
+        return sum(sh.tree.io.reads for sh in self.shards)
+
+    @property
+    def io_writes(self) -> int:
+        return sum(sh.tree.io.writes for sh in self.shards)
+
+    @property
+    def num_entries(self) -> int:
+        return sum(sh.tree.num_entries for sh in self.shards)
+
+    @property
+    def kernel_counters(self) -> KernelCounters:
+        return KernelCounters(
+            sum(sh.kernels.interval_calls for sh in self.shards),
+            sum(sh.kernels.interval_queries for sh in self.shards),
+            sum(sh.kernels.bloom_calls for sh in self.shards),
+            sum(sh.kernels.bloom_queries for sh in self.shards))
+
+    def cache_snapshot(self) -> dict:
+        snaps = [sh.cache.snapshot() for sh in self.shards]
+        hits = sum(s["hits"] for s in snaps)
+        misses = sum(s["misses"] for s in snaps)
+        return {"hits": hits, "misses": misses,
+                "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+                "per_shard": snaps}
+
+    def stats(self) -> dict:
+        return {
+            "num_shards": self.num_shards,
+            "partition": self.router.partition,
+            "entries": self.num_entries,
+            "engine": self.stats_.snapshot(),
+            "io": merge_io_snapshots(
+                [sh.tree.io.snapshot() for sh in self.shards]),
+            "cache": self.cache_snapshot(),
+            "kernels": self.kernel_counters.snapshot(),
+        }

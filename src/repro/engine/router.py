@@ -1,0 +1,100 @@
+"""Shard routing: partition op batches across shards, merge in order.
+
+Two partition schemes:
+
+  hash    shard = mix64(key) % N.  Point ops spread uniformly; a range
+          delete broadcasts to every shard (its keys are scattered).
+  range   the key universe is cut into N equal slabs; point ops go to
+          their slab, range ops touch only overlapping slabs (clipped,
+          so each shard's global index never learns about foreign keys).
+
+Every key deterministically owns exactly one shard, so per-shard sequence
+numbers are enough for correctness: visibility (newest-wins, range-delete
+kills strictly older) only ever compares entries of the SAME key, and a
+key's whole history lives on one shard in arrival order.
+
+``split`` returns per-shard index arrays; callers scatter per-shard
+results through those indices to restore request order exactly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MIX_MUL = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer (same mixing family as repro.core.eve)."""
+    x = np.asarray(x, dtype=np.uint64) * _MIX_MUL
+    x ^= x >> np.uint64(31)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(29)
+    return x
+
+
+class ShardRouter:
+    def __init__(self, num_shards: int, partition: str = "hash",
+                 universe: int = 1 << 63):
+        assert num_shards >= 1
+        assert partition in ("hash", "range"), partition
+        self.num_shards = num_shards
+        self.partition = partition
+        self.universe = int(universe)
+        # Slab width for range partitioning (ceil so N slabs cover U).
+        self._width = -(-self.universe // num_shards)
+
+    # ------------------------------------------------------------ points
+    def shard_of(self, keys: np.ndarray) -> np.ndarray:
+        """Owning shard of each key; (n,) int64."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        if self.num_shards == 1:
+            return np.zeros(len(keys), dtype=np.int64)
+        if self.partition == "hash":
+            return (_mix64(keys) % np.uint64(self.num_shards)).astype(
+                np.int64)
+        return np.minimum(keys // np.uint64(self._width),
+                          self.num_shards - 1).astype(np.int64)
+
+    def shard_of_scalar(self, key: int) -> int:
+        return int(self.shard_of(np.asarray([key], dtype=np.uint64))[0])
+
+    def split(self, keys: np.ndarray) -> list[np.ndarray]:
+        """Index arrays per shard: keys[idx[s]] is shard s's sub-batch.
+
+        Indices are ascending within each shard (stable), so per-shard
+        sub-batches preserve the request's relative order; scattering
+        results back through idx[s] restores full request order.
+        """
+        keys = np.asarray(keys, dtype=np.uint64)
+        if self.num_shards == 1:
+            return [np.arange(len(keys))]
+        sid = self.shard_of(keys)
+        order = np.argsort(sid, kind="stable")
+        counts = np.bincount(sid, minlength=self.num_shards)
+        bounds = np.concatenate([[0], np.cumsum(counts)])
+        return [order[bounds[s]:bounds[s + 1]]
+                for s in range(self.num_shards)]
+
+    # ------------------------------------------------------------ ranges
+    def shards_for_range(self, lo: int, hi: int) -> list[tuple[int, int,
+                                                               int]]:
+        """(shard, lo', hi') per shard a range op must visit."""
+        lo, hi = int(lo), int(hi)
+        assert lo < hi
+        if self.partition == "hash":
+            # Keys of the range are scattered: broadcast, unclipped.
+            return [(s, lo, hi) for s in range(self.num_shards)]
+        first = min(lo // self._width, self.num_shards - 1)
+        last = min((hi - 1) // self._width, self.num_shards - 1)
+        out = []
+        for s in range(first, last + 1):
+            slab_lo = s * self._width
+            # The last slab is unbounded above: shard_of clamps every
+            # key >= universe into it, so range ops must reach them too.
+            slab_hi = (s + 1) * self._width \
+                if s < self.num_shards - 1 else hi
+            c_lo, c_hi = max(lo, slab_lo), min(hi, slab_hi)
+            if c_lo < c_hi:
+                out.append((s, c_lo, c_hi))
+        return out

@@ -1,0 +1,70 @@
+"""Engine-level rollups: throughput, latency, I/O, cache, kernel usage.
+
+Each shard executor owns an ``IOStats`` ledger and kernel counters; the
+engine aggregates them here, together with per-op-type wall time, so one
+``engine.stats()`` call answers "what did the fleet do and what did it
+cost" — the serving-tier analogue of ``LSMTree.stats``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class KernelCounters:
+    """How often the fused Pallas filter stage actually ran."""
+
+    interval_calls: int = 0     # interval_query launches (DR-tree levels)
+    interval_queries: int = 0   # point-stab verdicts produced by them
+    bloom_calls: int = 0        # bloom_probe launches (SSTable filters)
+    bloom_queries: int = 0      # filter verdicts produced by them
+
+    def snapshot(self) -> dict:
+        return {
+            "interval_calls": self.interval_calls,
+            "interval_queries": self.interval_queries,
+            "bloom_calls": self.bloom_calls,
+            "bloom_queries": self.bloom_queries,
+        }
+
+
+@dataclass
+class EngineStats:
+    ops: dict = field(default_factory=dict)        # op -> count
+    wall: dict = field(default_factory=dict)       # op -> seconds
+    batches: dict = field(default_factory=dict)    # op -> batch count
+
+    def record(self, op: str, n: int, seconds: float) -> None:
+        self.ops[op] = self.ops.get(op, 0) + int(n)
+        self.wall[op] = self.wall.get(op, 0.0) + float(seconds)
+        self.batches[op] = self.batches.get(op, 0) + 1
+
+    def ops_per_sec(self, op: str) -> float:
+        return self.ops.get(op, 0) / max(self.wall.get(op, 0.0), 1e-12)
+
+    def us_per_op(self, op: str) -> float:
+        n = self.ops.get(op, 0)
+        return 1e6 * self.wall.get(op, 0.0) / n if n else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "ops": dict(self.ops),
+            "wall_seconds": {k: round(v, 6) for k, v in self.wall.items()},
+            "batches": dict(self.batches),
+            "ops_per_sec": {k: round(self.ops_per_sec(k), 1)
+                            for k in self.ops},
+            "us_per_op": {k: round(self.us_per_op(k), 3) for k in self.ops},
+        }
+
+
+def merge_io_snapshots(snaps: list[dict]) -> dict:
+    """Sum per-shard IOStats snapshots into one fleet ledger."""
+    out = {"reads": 0, "writes": 0, "total": 0, "by_tag": {}}
+    for s in snaps:
+        out["reads"] += s["reads"]
+        out["writes"] += s["writes"]
+        out["total"] += s["total"]
+        for tag, n in s["by_tag"].items():
+            out["by_tag"][tag] = out["by_tag"].get(tag, 0) + n
+    return out

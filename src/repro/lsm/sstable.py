@@ -9,6 +9,7 @@ block I/O, matching §2's cost model.
 
 from __future__ import annotations
 
+import itertools
 import math
 
 import numpy as np
@@ -18,11 +19,17 @@ from ..core.iostats import IOStats
 from .format import LSMConfig, PUT, TOMBSTONE
 
 
+_RUN_UID = itertools.count(1)
+
+
 class SSTable:
     def __init__(self, keys: np.ndarray, seqs: np.ndarray, types: np.ndarray,
                  vals: np.ndarray, config: LSMConfig, seed: int = 0):
         assert len(keys) == len(seqs) == len(types) == len(vals)
         assert np.all(keys[:-1] < keys[1:]), "run must be sorted, unique"
+        # Process-unique run id: block caches key cached blocks on
+        # (uid, block), so entries of compacted-away runs age out safely.
+        self.uid = next(_RUN_UID)
         self.keys = keys.astype(np.uint64, copy=False)
         self.seqs = seqs.astype(np.uint64, copy=False)
         self.types = types.astype(np.uint8, copy=False)
@@ -61,11 +68,16 @@ class SSTable:
             return (True, int(self.seqs[i]), self.types[i], int(self.vals[i]))
         return (False, 0, PUT, 0)
 
-    def get_batch(self, keys: np.ndarray, io: IOStats | None = None):
+    def get_batch(self, keys: np.ndarray, io: IOStats | None = None, *,
+                  cache=None, maybe: np.ndarray | None = None):
         """Vectorized point lookups.
 
         Returns (found, seqs, types, vals); charges one block I/O per key
-        that passes the Bloom filter (fence pointers are in memory)."""
+        that passes the Bloom filter (fence pointers are in memory).
+        ``maybe`` optionally supplies a precomputed filter verdict (e.g.
+        from the Pallas bloom kernel — bit-exact with the host filter);
+        ``cache`` is an optional read-through block cache: block reads it
+        already holds are not charged."""
         keys = np.asarray(keys, dtype=np.uint64)
         n = len(keys)
         found = np.zeros(n, dtype=bool)
@@ -74,11 +86,17 @@ class SSTable:
         vals = np.zeros(n, dtype=np.uint64)
         if len(self.keys) == 0 or n == 0:
             return found, seqs, types, vals
-        maybe = self.bloom.might_contain(keys)
-        if io is not None:
-            io.read_blocks(int(maybe.sum()), tag="data_block")
+        if maybe is None:
+            maybe = self.bloom.might_contain(keys)
         idx = np.searchsorted(self.keys, keys[maybe])
         idxc = np.minimum(idx, len(self.keys) - 1)
+        if io is not None:
+            if cache is not None:
+                blocks = idxc // self.config.entries_per_block
+                hits = cache.probe_many(self.uid, blocks)
+                io.read_blocks(int((~hits).sum()), tag="data_block")
+            else:
+                io.read_blocks(int(maybe.sum()), tag="data_block")
         hit = self.keys[idxc] == keys[maybe]
         sub = np.flatnonzero(maybe)[hit]
         found[sub] = True

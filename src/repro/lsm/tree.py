@@ -144,8 +144,16 @@ class LSMTree:
             return None
         return val
 
-    def get_batch(self, keys: np.ndarray):
-        """Vectorized point lookups. Returns (found_mask, values)."""
+    def get_batch(self, keys: np.ndarray, *, cache=None, bloom_fn=None,
+                  validity_fn=None):
+        """Vectorized point lookups. Returns (found_mask, values).
+
+        Optional hooks let an execution layer swap HOW a stage computes
+        without forking the read path (``repro.engine`` uses these for
+        its Pallas kernels and block cache): ``bloom_fn(sstable, keys)``
+        supplies filter verdicts, ``cache`` absorbs data-block charges,
+        ``validity_fn(keys, seqs)`` replaces the GLORAN validity probe.
+        """
         keys = np.asarray(keys, dtype=np.uint64)
         n = len(keys)
         resolved = np.zeros(n, dtype=bool)
@@ -179,7 +187,10 @@ class LSMTree:
                     self.level_rts[i].probe_batch(keys[todo], self.io))
             if lvl is None or len(lvl) == 0:
                 continue
-            f, s, t, v = lvl.get_batch(keys[todo], self.io)
+            sub = keys[todo]
+            f, s, t, v = lvl.get_batch(
+                sub, self.io, cache=cache,
+                maybe=bloom_fn(lvl, sub) if bloom_fn is not None else None)
             idx = np.flatnonzero(todo)[f]
             resolved[idx] = True
             out_found[idx] = t[f] == 0
@@ -193,8 +204,8 @@ class LSMTree:
         elif self.strategy == "gloran":
             cand = out_found
             if cand.any():
-                dead = self.gloran.is_deleted_batch(keys[cand],
-                                                    out_seqs[cand])
+                is_dead = validity_fn or self.gloran.is_deleted_batch
+                dead = is_dead(keys[cand], out_seqs[cand])
                 sub = np.flatnonzero(cand)[dead]
                 out_found[sub] = False
         return out_found, out_vals

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.gloran import GloranConfig
-from ..lsm import LSMConfig, LSMTree
+from ..engine import Engine, EngineConfig
+from ..lsm import LSMConfig
 from ..models import Transformer, tree_init
 
 PAGE_BITS = 16
@@ -40,15 +41,35 @@ class ServeStats:
 
 
 class SessionRegistry:
-    """LSM-backed session/page registry with range-delete expiry."""
+    """Engine-backed session/page registry with range-delete expiry.
+
+    Lookups, registrations, and expiries execute through a sharded
+    batched query ``Engine``; ``num_shards=1`` (the default) preserves
+    the original single-tree behavior while still running the batched
+    read path.
+    """
 
     def __init__(self, strategy: str = "gloran",
                  lsm_config: LSMConfig | None = None,
-                 gloran_config: GloranConfig | None = None):
-        self.tree = LSMTree(
-            lsm_config or LSMConfig(buffer_capacity=4096, key_size=16,
-                                    value_size=48),
-            strategy=strategy, gloran_config=gloran_config)
+                 gloran_config: GloranConfig | None = None,
+                 num_shards: int = 1,
+                 engine_config: EngineConfig | None = None):
+        self.engine = Engine(
+            num_shards=num_shards, strategy=strategy,
+            lsm_config=lsm_config or LSMConfig(buffer_capacity=4096,
+                                               key_size=16, value_size=48),
+            gloran_config=gloran_config, config=engine_config)
+
+    @property
+    def tree(self):
+        """The backing LSM-tree — only well-defined unsharded."""
+        assert self.engine.num_shards == 1, \
+            "registry is sharded; use .engine for per-shard access"
+        return self.engine.shards[0].tree
+
+    @property
+    def io_reads(self) -> int:
+        return self.engine.io_reads
 
     @staticmethod
     def key(session_id: int, page: int = 0) -> int:
@@ -58,22 +79,25 @@ class SessionRegistry:
                  values: np.ndarray) -> None:
         keys = (np.uint64(session_id) << np.uint64(PAGE_BITS)) | \
             np.asarray(pages, dtype=np.uint64)
-        self.tree.put_batch(keys, np.asarray(values, dtype=np.uint64))
+        self.engine.put_batch(keys, np.asarray(values, dtype=np.uint64))
 
     def lookup(self, session_ids: np.ndarray,
                pages: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         keys = (np.asarray(session_ids, np.uint64) << np.uint64(PAGE_BITS)) \
             | np.asarray(pages, dtype=np.uint64)
-        return self.tree.get_batch(keys)
+        return self.engine.get_batch(keys)
 
     def expire_session(self, session_id: int) -> None:
         lo = session_id << PAGE_BITS
-        self.tree.range_delete(lo, lo + (1 << PAGE_BITS))
+        self.engine.range_delete(lo, lo + (1 << PAGE_BITS))
 
     def expire_range(self, first_session: int, last_session: int) -> None:
         """Expire [first, last) sessions with ONE range delete."""
-        self.tree.range_delete(first_session << PAGE_BITS,
-                               last_session << PAGE_BITS)
+        self.engine.range_delete(first_session << PAGE_BITS,
+                                 last_session << PAGE_BITS)
+
+    def flush(self) -> None:
+        self.engine.flush()
 
 
 class ServeLoop:
@@ -109,12 +133,12 @@ class ServeLoop:
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         out = []
         for t in range(steps):
-            io0 = self.registry.tree.io.reads
+            io0 = self.registry.io_reads
             found, _ = self.registry.lookup(
                 session_ids, np.full(b, t % 4, dtype=np.uint64))
             self.stats.registry_lookups += b
             self.stats.registry_io_reads += \
-                self.registry.tree.io.reads - io0
+                self.registry.io_reads - io0
             logits, cache = self._decode(self.params, tok, cache,
                                          p_len + t)
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(

@@ -2,7 +2,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dependency: property tests only run when present
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core import (AreaSet, disjointize, disjointize_oracle,
                         merge_disjoint)
@@ -65,56 +70,60 @@ class TestMergeDisjoint:
 
 
 # ---------------------------------------------------------------- property
-@st.composite
-def invariant_area_sets(draw, max_n=24, universe=200, max_seq=100):
-    """Areas under the system invariant: all smin at a common GC floor."""
-    n = draw(st.integers(1, max_n))
-    floor = draw(st.integers(0, 5))
-    recs = []
-    for _ in range(n):
-        lo = draw(st.integers(0, universe - 2))
-        hi = draw(st.integers(lo + 1, universe))
-        smax = draw(st.integers(floor + 1, max_seq))
-        recs.append((lo, hi, floor, smax))
-    return AreaSet.from_records(recs)
+if HAS_HYPOTHESIS:
+    @st.composite
+    def invariant_area_sets(draw, max_n=24, universe=200, max_seq=100):
+        """Areas under the system invariant: smin at a common GC floor."""
+        n = draw(st.integers(1, max_n))
+        floor = draw(st.integers(0, 5))
+        recs = []
+        for _ in range(n):
+            lo = draw(st.integers(0, universe - 2))
+            hi = draw(st.integers(lo + 1, universe))
+            smax = draw(st.integers(floor + 1, max_seq))
+            recs.append((lo, hi, floor, smax))
+        return AreaSet.from_records(recs)
 
+    @settings(max_examples=120, deadline=None)
+    @given(invariant_area_sets())
+    def test_disjointize_matches_oracle(s):
+        got = disjointize(s)
+        want = disjointize_oracle(s)
+        np.testing.assert_array_equal(got.to_records(), want.to_records())
 
-@settings(max_examples=120, deadline=None)
-@given(invariant_area_sets())
-def test_disjointize_matches_oracle(s):
-    got = disjointize(s)
-    want = disjointize_oracle(s)
-    np.testing.assert_array_equal(got.to_records(), want.to_records())
+    @settings(max_examples=120, deadline=None)
+    @given(invariant_area_sets(), st.data())
+    def test_disjointize_coverage_equivalence(s, data):
+        """Point coverage is preserved exactly (Lemma 4.2 correctness)."""
+        d = disjointize(s)
+        assert d.is_disjoint_sorted()
+        assert len(d) <= 2 * len(s)  # paper's 2x bound
+        keys = np.array([data.draw(st.integers(0, 201)) for _ in range(32)],
+                        dtype=np.uint64)
+        seqs = np.array([data.draw(st.integers(0, 101)) for _ in range(32)],
+                        dtype=np.uint64)
+        np.testing.assert_array_equal(
+            d.covers_batch_bruteforce(keys, seqs),
+            s.covers_batch_bruteforce(keys, seqs))
 
-
-@settings(max_examples=120, deadline=None)
-@given(invariant_area_sets(), st.data())
-def test_disjointize_coverage_equivalence(s, data):
-    """Point coverage is preserved exactly (Lemma 4.2 correctness)."""
-    d = disjointize(s)
-    assert d.is_disjoint_sorted()
-    assert len(d) <= 2 * len(s)  # paper's 2x bound
-    keys = np.array(
-        [data.draw(st.integers(0, 201)) for _ in range(32)], dtype=np.uint64)
-    seqs = np.array(
-        [data.draw(st.integers(0, 101)) for _ in range(32)], dtype=np.uint64)
-    np.testing.assert_array_equal(
-        d.covers_batch_bruteforce(keys, seqs),
-        s.covers_batch_bruteforce(keys, seqs))
-
-
-@settings(max_examples=60, deadline=None)
-@given(invariant_area_sets(), invariant_area_sets())
-def test_merge_of_disjoint_sets_coverage(s1, s2):
-    a, b = disjointize(s1), disjointize(s2)
-    m = merge_disjoint(a, b)
-    assert m.is_disjoint_sorted()
-    rng = np.random.default_rng(0)
-    keys = rng.integers(0, 202, size=64).astype(np.uint64)
-    seqs = rng.integers(0, 102, size=64).astype(np.uint64)
-    both = s1.concat(s2)
-    np.testing.assert_array_equal(m.covers_batch_bruteforce(keys, seqs),
-                                  both.covers_batch_bruteforce(keys, seqs))
+    @settings(max_examples=60, deadline=None)
+    @given(invariant_area_sets(), invariant_area_sets())
+    def test_merge_of_disjoint_sets_coverage(s1, s2):
+        a, b = disjointize(s1), disjointize(s2)
+        m = merge_disjoint(a, b)
+        assert m.is_disjoint_sorted()
+        rng = np.random.default_rng(0)
+        keys = rng.integers(0, 202, size=64).astype(np.uint64)
+        seqs = rng.integers(0, 102, size=64).astype(np.uint64)
+        both = s1.concat(s2)
+        np.testing.assert_array_equal(
+            m.covers_batch_bruteforce(keys, seqs),
+            both.covers_batch_bruteforce(keys, seqs))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; property tests "
+                             "not collected")
+    def test_disjointize_property_suite_requires_hypothesis():
+        pass
 
 
 def test_disjointize_idempotent():

@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (AreaSet, DRTree, EVE, GloranConfig, GloranIndex,
                         IOStats, LSMDRTree, LSMDRTreeConfig, LSMRTree,
@@ -153,6 +152,57 @@ class TestLSMRTreeBaseline:
         got = np.array([r.covers(int(k), int(q)) for k, q in zip(keys, seqs)])
         np.testing.assert_array_equal(got, want)
 
+    def test_covers_batch_matches_scalar_and_charges_io(self):
+        cfg = LSMDRTreeConfig(buffer_capacity=16, size_ratio=3)
+        r = LSMRTree(cfg)
+        rng = np.random.default_rng(15)
+        for seq in range(1, 300):
+            lo = int(rng.integers(0, 800))
+            r.insert(lo, lo + int(rng.integers(20, 200)), smax=seq)
+        keys = rng.integers(0, 1100, size=300).astype(np.uint64)
+        seqs = rng.integers(0, 320, size=300).astype(np.uint64)
+        want = np.array([r.covers(int(k), int(q))
+                         for k, q in zip(keys, seqs)])
+        r0 = r.io.reads
+        got = r.covers_batch(keys, seqs)
+        np.testing.assert_array_equal(got, want)
+        assert r.io.reads > r0  # descents are charged
+
+    def test_rtree_covers_batch_matches_scalar(self):
+        t = RTree(max_entries=4)
+        rng = np.random.default_rng(16)
+        for _ in range(250):
+            lo = int(rng.integers(0, 1000))
+            t.insert(lo, lo + int(rng.integers(1, 80)),
+                     0, int(rng.integers(1, 90)))
+        keys = rng.integers(0, 1100, size=400).astype(np.uint64)
+        seqs = rng.integers(0, 100, size=400).astype(np.uint64)
+        want = np.array([t.covers(int(k), int(q))
+                         for k, q in zip(keys, seqs)])
+        np.testing.assert_array_equal(t.covers_batch(keys, seqs), want)
+
+    def test_gloran0_batch_path_avoids_per_key_fallback(self):
+        """GLORAN0 (use_drtree=False) exposes covers_batch, so
+        ``is_deleted_batch`` never falls into the per-key Python loop."""
+        g = GloranIndex(GloranConfig(
+            index=LSMDRTreeConfig(buffer_capacity=16, size_ratio=3),
+            eve=RAEConfig(capacity=64, key_universe=1 << 20),
+            use_drtree=False))
+        assert hasattr(g.index, "covers_batch")
+        rng = np.random.default_rng(18)
+        recs = []
+        for seq in range(1, 250):
+            lo = int(rng.integers(0, 5000))
+            hi = lo + int(rng.integers(1, 300))
+            g.range_delete(lo, hi, seq)
+            recs.append((lo, hi, 0, seq))
+        s = areas_from(recs)
+        keys = rng.integers(0, 5400, size=400).astype(np.uint64)
+        seqs = rng.integers(0, 270, size=400).astype(np.uint64)
+        np.testing.assert_array_equal(
+            g.is_deleted_batch(keys, seqs),
+            s.covers_batch_bruteforce(keys, seqs))
+
 
 class TestEVE:
     def test_no_false_negatives(self):
@@ -251,6 +301,18 @@ class TestGloranIndex:
             g_eve.is_deleted(int(k), 2000)
             g_raw.is_deleted(int(k), 2000)
         assert (g_eve.io.reads - r0_eve) < (g_raw.io.reads - r0_raw)
+
+    def test_memory_bytes_charges_all_four_buffer_fields(self):
+        """The R-tree write buffer holds (lo, hi, smin, smax) per record:
+        4 key-sized fields, not 2."""
+        cfg = GloranConfig(index=LSMDRTreeConfig(buffer_capacity=1024,
+                                                 key_size=16),
+                           use_eve=False)
+        g = GloranIndex(cfg)
+        for seq in range(1, 101):
+            g.range_delete(seq * 10, seq * 10 + 5, seq)
+        assert g.index.buffer.size == 100
+        assert g.memory_bytes == 100 * 4 * cfg.index.key_size
 
     def test_gc_floor_correctness_after_update(self):
         """The paper's §4.1 hazard: key updated after a range delete must

@@ -3,7 +3,12 @@ strategies + the paper's headline I/O behavior."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dependency: property tests only run when present
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core import GloranConfig, LSMDRTreeConfig, RAEConfig
 from repro.lsm import LSMConfig, LSMTree, STRATEGIES
@@ -176,20 +181,26 @@ def test_update_after_range_delete_visible():
         assert t.get(8) == 200, strategy
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.tuples(st.sampled_from(["put", "del", "rdel"]),
-                          st.integers(0, 300), st.integers(1, 60)),
-                min_size=1, max_size=120),
-       st.sampled_from(["lrr", "gloran"]))
-def test_property_lsm_matches_model(raw_ops, strategy):
-    ops = []
-    for kind, a, b in raw_ops:
-        if kind == "put":
-            ops.append(("put", a, b))
-        elif kind == "del":
-            ops.append(("del", a))
-        else:
-            ops.append(("rdel", a, a + b))
-    t, m = run_ops(strategy, ops)
-    for k in range(0, 310, 7):
-        assert t.get(k) == m.get(k), (strategy, k)
+if HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["put", "del", "rdel"]),
+                              st.integers(0, 300), st.integers(1, 60)),
+                    min_size=1, max_size=120),
+           st.sampled_from(["lrr", "gloran"]))
+    def test_property_lsm_matches_model(raw_ops, strategy):
+        ops = []
+        for kind, a, b in raw_ops:
+            if kind == "put":
+                ops.append(("put", a, b))
+            elif kind == "del":
+                ops.append(("del", a))
+            else:
+                ops.append(("rdel", a, a + b))
+        t, m = run_ops(strategy, ops)
+        for k in range(0, 310, 7):
+            assert t.get(k) == m.get(k), (strategy, k)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; property tests "
+                             "not collected")
+    def test_property_lsm_matches_model():
+        pass

@@ -11,6 +11,7 @@ import pytest
 
 from repro.ckpt import CheckpointManager
 from repro.configs import get_config, smoke
+from repro.launch.mesh import make_mesh_compat
 from repro.data import PipelineConfig, TokenPipeline, VersionedSampleStore
 from repro.models import Transformer, tree_init
 from repro.optim import OptimizerConfig, quantize_roundtrip
@@ -79,8 +80,7 @@ class TestCheckpoint:
         m = CheckpointManager(str(tmp_path), keep=1)
         state = {"w": jnp.arange(16.0).reshape(4, 4)}
         m.save(1, state, extra={}, blocking=True)
-        mesh = jax.make_mesh((1,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((1,), ("x",))
         sh = {"w": jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec("x", None))}
         got, _ = m.restore(state, shardings=sh)
@@ -172,8 +172,7 @@ class TestGradCompression:
         """Error feedback: the MEAN of compressed reductions over steps
         converges to the exact mean gradient."""
         from repro.optim.grad_compress import compressed_psum
-        mesh = jax.make_mesh((1,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((1,), ("pod",))
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as PS
         rng = np.random.default_rng(1)
