@@ -1,0 +1,220 @@
+"""Batched range-op benchmark -> BENCH_range.json.
+
+Compares the engine's batched range-scan path (one routed
+``range_scan_batch`` call per batch of ranges: shared memtable snapshot
+per shard, vectorized slice bounds, REMIX-style sorted-view merges, one
+batched GLORAN validity pass on the interval-kernel hook) against the
+seed-style per-call loop (one ``LSMTree.range_scan`` Python call per
+range) on the same data and range distribution.  Also reports batched
+range deletes vs the per-call delete loop.
+
+    PYTHONPATH=src python benchmarks/range_bench.py
+
+Env:
+    REPRO_RANGE_BENCH_SMOKE=1   ~10 s subset (scripts/check.sh)
+    REPRO_BENCH_SCALE=full      ~4x workload
+    REPRO_BENCH_OUT=path.json   output path (default BENCH_range.json)
+
+Engines use range partitioning: scans clip to overlapping slabs, so a
+batch of scans spreads across shards instead of broadcasting — the
+partition scheme a range-heavy workload would pick.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import GloranConfig, LSMDRTreeConfig, RAEConfig
+from repro.engine import Engine, EngineConfig
+from repro.lsm import LSMConfig, LSMTree
+
+SMOKE = os.environ.get("REPRO_RANGE_BENCH_SMOKE") == "1"
+SCALE = 4 if os.environ.get("REPRO_BENCH_SCALE") == "full" else 1
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_range.json")
+
+UNIVERSE = 1 << 22
+SCAN_LEN = 512
+RDEL_LEN = 128
+
+if SMOKE:
+    PRELOAD = 20_000
+    N_RDEL = 400
+    SHARDS = (1, 4)
+    BATCHES = (64,)
+    ROUNDS = 3
+else:
+    PRELOAD = 60_000 * SCALE
+    N_RDEL = 1500 * SCALE
+    SHARDS = (1, 2, 4)
+    BATCHES = (16, 64, 256)
+    ROUNDS = 5
+
+
+def lsm_cfg() -> LSMConfig:
+    return LSMConfig(buffer_capacity=4096, key_size=16, value_size=48,
+                     key_universe=UNIVERSE)
+
+
+def gloran_cfg() -> GloranConfig:
+    return GloranConfig(
+        index=LSMDRTreeConfig(buffer_capacity=256, size_ratio=10,
+                              key_size=16),
+        eve=RAEConfig(capacity=100_000, key_universe=UNIVERSE))
+
+
+def engine_cfg() -> EngineConfig:
+    # Lower launch gate than engine_bench: EVE's negative probes prune
+    # most scan candidates before the index, so the surviving batches
+    # are small but still worth one launch per level per scan batch.
+    return EngineConfig(partition="range", cache_blocks=16384,
+                        kernel_min_batch=32, kernel_min_areas=64,
+                        kernel_min_filter=4096)
+
+
+def preload(store, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, UNIVERSE, size=PRELOAD).astype(np.uint64)
+    for i in range(0, len(keys), 8192):
+        kk = keys[i:i + 8192]
+        store.put_batch(kk, kk + np.uint64(1))
+    for _ in range(N_RDEL):
+        lo = int(rng.integers(0, UNIVERSE - RDEL_LEN - 1))
+        store.range_delete(lo, lo + RDEL_LEN)
+
+
+def scan_batches(batch: int, rounds: int, seed: int) -> list:
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(rounds + 1):
+        los = rng.integers(0, UNIVERSE - SCAN_LEN - 1, size=batch)
+        out.append([(int(lo), int(lo) + SCAN_LEN) for lo in los])
+    return out
+
+
+def bench_scan_loop(tree: LSMTree, batch: int) -> float:
+    """Seed-style baseline: one ``range_scan`` Python call per range."""
+    batches = scan_batches(batch, ROUNDS, seed=51)
+    for lo, hi in batches[0]:
+        tree.range_scan(lo, hi)  # warm
+    t0 = time.perf_counter()
+    for ranges in batches[1:]:
+        for lo, hi in ranges:
+            tree.range_scan(lo, hi)
+    return ROUNDS * batch / (time.perf_counter() - t0)
+
+
+def bench_scan_engine(eng: Engine, batch: int) -> dict:
+    batches = scan_batches(batch, ROUNDS, seed=51)
+    eng.range_scan_batch(batches[0])  # warm caches + jit
+    r0 = eng.io_reads
+    k0 = eng.kernel_counters
+    t0 = time.perf_counter()
+    n_entries = 0
+    for ranges in batches[1:]:
+        for keys, _ in eng.range_scan_batch(ranges):
+            n_entries += len(keys)
+    dt = time.perf_counter() - t0
+    n = ROUNDS * batch
+    return {
+        "scans_per_sec": n / dt,
+        "entries_per_scan": n_entries / n,
+        "io_reads_per_scan": (eng.io_reads - r0) / n,
+        "interval_kernel_calls":
+            eng.kernel_counters.interval_calls - k0.interval_calls,
+    }
+
+
+def bench_rdel(make, batch: int = 64) -> dict:
+    """Batched vs per-call range deletes on fresh stores."""
+    rng = np.random.default_rng(77)
+    spans = [(int(lo), int(lo) + RDEL_LEN)
+             for lo in rng.integers(0, UNIVERSE - RDEL_LEN - 1,
+                                    size=batch)]
+    eng = make()
+    t0 = time.perf_counter()
+    eng.range_delete_batch(spans)
+    dt_batch = time.perf_counter() - t0
+    eng = make()
+    t0 = time.perf_counter()
+    for lo, hi in spans:
+        eng.range_delete(lo, hi)
+    dt_loop = time.perf_counter() - t0
+    return {"batched_rdels_per_sec": batch / dt_batch,
+            "loop_rdels_per_sec": batch / dt_loop,
+            "speedup": dt_loop / dt_batch}
+
+
+def run() -> dict:
+    tree = LSMTree(lsm_cfg(), "gloran", gloran_cfg())
+    preload(tree, seed=5)
+    rows = []
+    base = {b: bench_scan_loop(tree, b) for b in BATCHES}
+    for b, v in base.items():
+        print(f"# per-call scan loop  batch={b}: {v:,.0f} scans/s",
+              flush=True)
+    for shards in SHARDS:
+        eng = Engine(num_shards=shards, strategy="gloran",
+                     lsm_config=lsm_cfg(), gloran_config=gloran_cfg(),
+                     config=engine_cfg())
+        preload(eng, seed=5)
+        for batch in BATCHES:
+            m = bench_scan_engine(eng, batch)
+            row = {
+                "shards": shards,
+                "batch": batch,
+                "engine_scans_per_sec": round(m["scans_per_sec"], 1),
+                "per_call_scans_per_sec": round(base[batch], 1),
+                "speedup_vs_per_call_loop": round(
+                    m["scans_per_sec"] / base[batch], 2),
+                "entries_per_scan": round(m["entries_per_scan"], 1),
+                "io_reads_per_scan": round(m["io_reads_per_scan"], 3),
+                "interval_kernel_calls": m["interval_kernel_calls"],
+            }
+            rows.append(row)
+            print(f"# engine x{shards} batch={batch}: "
+                  f"{m['scans_per_sec']:,.0f} scans/s "
+                  f"({row['speedup_vs_per_call_loop']}x), "
+                  f"ik={m['interval_kernel_calls']}", flush=True)
+    rdel = bench_rdel(lambda: Engine(
+        num_shards=4, strategy="gloran", lsm_config=lsm_cfg(),
+        gloran_config=gloran_cfg(), config=engine_cfg()))
+    print(f"# range_delete_batch x64: {rdel['speedup']:.2f}x vs loop",
+          flush=True)
+    target = [r for r in rows if r["shards"] == max(SHARDS)]
+    result = {
+        "config": {
+            "preload_entries": PRELOAD,
+            "preload_range_deletes": N_RDEL,
+            "universe": UNIVERSE,
+            "scan_len": SCAN_LEN,
+            "rounds": ROUNDS,
+            "strategy": "gloran",
+            "partition": "range",
+            "smoke": SMOKE,
+        },
+        "per_call_scans_per_sec": {str(b): round(v, 1)
+                                   for b, v in base.items()},
+        "rows": rows,
+        "range_delete_batch": {k: round(v, 2) for k, v in rdel.items()},
+        "acceptance": {
+            "min_speedup_max_shards": min(
+                (r["speedup_vs_per_call_loop"] for r in target),
+                default=None),
+            "max_speedup_max_shards": max(
+                (r["speedup_vs_per_call_loop"] for r in target),
+                default=None),
+        },
+    }
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {OUT}: min {max(SHARDS)}-shard scan speedup = "
+          f"{result['acceptance']['min_speedup_max_shards']}x", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -18,3 +18,15 @@ assert s is not None and s >= 2.0, \
     f"engine speedup regressed: {s}x < 2x vs per-key loop"
 print(f"check OK: 4-shard batched lookups {s}x vs per-key loop")
 EOF
+
+REPRO_RANGE_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_range_smoke.json \
+    python benchmarks/range_bench.py
+
+python - <<'EOF'
+import json
+d = json.load(open("/tmp/BENCH_range_smoke.json"))
+s = d["acceptance"]["min_speedup_max_shards"]
+assert s is not None and s >= 2.0, \
+    f"batched range-scan speedup regressed: {s}x < 2x vs per-call loop"
+print(f"check OK: batched range scans {s}x vs per-call loop")
+EOF

@@ -95,6 +95,31 @@ class GloranIndex:
                                               entry_seqs[maybe])]
         return out
 
+    def charge_range_scan(self, lo: int, hi: int,
+                          block_size: int | None = None) -> None:
+        """Charge the I/O of iterating the index for one range scan.
+
+        A scan over [lo, hi) opens one iterator per on-disk index level
+        and streams the (sorted, sequential) records overlapping the
+        range: 1 seek plus ``cnt * 2k / B`` sequential block reads per
+        level.  ``block_size`` defaults to the index's own block size;
+        the host store passes its data block size so both ledgers use
+        one unit.
+        """
+        bs = int(block_size) if block_size else self.config.index.block_size
+        for lvl in getattr(self.index, "levels", []):
+            if lvl is None:
+                continue
+            a = lvl.areas if hasattr(lvl, "areas") else None
+            if a is None or len(a) == 0:
+                continue
+            i0 = int(np.searchsorted(a.hi, np.uint64(lo), side="right"))
+            i1 = int(np.searchsorted(a.lo, np.uint64(hi)))
+            cnt = max(0, i1 - i0)
+            self.io.read_blocks(
+                1 + (cnt * 2 * self.config.index.key_size) // bs,
+                tag="gloran_scan")
+
     # ----------------------------------------------------------------- gc
     def on_bottom_compaction(self, watermark: int) -> None:
         """Event-listener hook (§4.4): a bottommost-level data compaction

@@ -1,10 +1,15 @@
 """repro.engine: sharded, batched query execution over LSM-tree shards.
 
 The layer between the serving runtime and the storage substrate: routes
-vectorized op batches across N ``LSMTree`` shards, executes point-lookup
-batches through the fused Pallas filter stage (Bloom + DR-tree interval
-kernels), charges I/O through a read-through block cache, and rolls
-per-shard ledgers up into engine-level stats.
+vectorized op batches — point lookups, writes, range scans, and range
+deletes — across N ``LSMTree`` shards, executes read batches through the
+fused Pallas filter stage (Bloom + DR-tree interval kernels, for point
+gets and scan validity alike), charges I/O through a read-through block
+cache, and rolls per-shard ledgers up into per-op-class engine stats.
+
+Public surface: ``Engine`` (the façade), ``EngineConfig`` (execution
+knobs), ``ShardRouter`` (partitioning), ``ShardExecutor`` (per-shard
+batched paths), ``BlockCache``, and the stats types.
 """
 
 from .cache import BlockCache

@@ -16,12 +16,32 @@ import numpy as np
 
 from ..core.gloran import GloranConfig
 from ..lsm import LSMConfig, LSMTree
+from ..lsm.merge import merge_runs
 from .executor import EngineConfig, ShardExecutor
 from .router import ShardRouter
 from .stats import EngineStats, KernelCounters, merge_io_snapshots
 
+_EMPTY_KV = (np.zeros(0, np.uint64), np.zeros(0, np.uint64))
+
 
 class Engine:
+    """Sharded, batched execution of point AND range ops.
+
+    Public surface (all batch results come back in request order):
+
+      put_batch / delete_batch / get_batch    vectorized point ops
+      put / delete / get                      scalar conveniences
+      range_scan_batch / range_scan           sorted live entries per range
+      range_delete_batch / range_delete       strategy-dispatched deletes
+      execute(ops)                            one mixed op stream
+      stats() / cache_snapshot()              per-op-class rollups
+
+    Range ops route like point ops: range-partitioned shards serve only
+    the overlapping slabs (clipped), hash-partitioned shards fan out and
+    the per-shard results — disjoint because every key owns exactly one
+    shard — are merged back into one sorted view per request.
+    """
+
     def __init__(self, num_shards: int = 1, strategy: str = "gloran",
                  lsm_config: LSMConfig | None = None,
                  gloran_config: GloranConfig | None = None,
@@ -39,46 +59,75 @@ class Engine:
             self.shards.append(ShardExecutor(tree, self.config))
         self.stats_ = EngineStats()
 
+    def _io_marks(self) -> tuple[int, int]:
+        return self.io_reads, self.io_writes
+
+    def _record(self, op: str, n: int, t0: float,
+                marks: tuple[int, int]) -> None:
+        """Roll wall time + the I/O charged since ``marks`` into stats."""
+        self.stats_.record(op, n, time.perf_counter() - t0,
+                           io_reads=self.io_reads - marks[0],
+                           io_writes=self.io_writes - marks[1])
+
     # ------------------------------------------------------------ writes
     def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        """Insert a batch of (key, val) pairs (split across shards)."""
         keys = np.asarray(keys, dtype=np.uint64)
         vals = np.asarray(vals, dtype=np.uint64)
-        t0 = time.perf_counter()
+        t0, io0 = time.perf_counter(), self._io_marks()
         for s, idx in enumerate(self.router.split(keys)):
             if len(idx):
                 self.shards[s].put_batch(keys[idx], vals[idx])
-        self.stats_.record("put", len(keys), time.perf_counter() - t0)
+        self._record("put", len(keys), t0, io0)
 
     def put(self, key: int, val: int) -> None:
+        """Scalar insert (a one-element ``put_batch``)."""
         self.put_batch(np.asarray([key], np.uint64),
                        np.asarray([val], np.uint64))
 
     def delete_batch(self, keys: np.ndarray) -> None:
+        """Point-delete a batch of keys (split across shards)."""
         keys = np.asarray(keys, dtype=np.uint64)
-        t0 = time.perf_counter()
+        t0, io0 = time.perf_counter(), self._io_marks()
         for s, idx in enumerate(self.router.split(keys)):
             if len(idx):
                 self.shards[s].delete_batch(keys[idx])
-        self.stats_.record("delete", len(keys), time.perf_counter() - t0)
+        self._record("delete", len(keys), t0, io0)
 
     def delete(self, key: int) -> None:
+        """Scalar point delete (a one-element ``delete_batch``)."""
         self.delete_batch(np.asarray([key], np.uint64))
 
     def range_delete(self, lo: int, hi: int) -> None:
-        t0 = time.perf_counter()
-        for s, c_lo, c_hi in self.router.shards_for_range(lo, hi):
-            self.shards[s].range_delete(c_lo, c_hi)
-        self.stats_.record("range_delete", 1, time.perf_counter() - t0)
+        """Delete all keys in [lo, hi) on every owning shard."""
+        self.range_delete_batch([(lo, hi)])
+
+    def range_delete_batch(self, ranges) -> None:
+        """Apply a batch of [lo, hi) range deletes.
+
+        Each range is routed like any range op — clipped to overlapping
+        slabs under range partitioning, broadcast under hash — and every
+        shard applies its visits in request order, so a later op in the
+        batch shadows an earlier one exactly as sequential calls would.
+        """
+        t0, io0 = time.perf_counter(), self._io_marks()
+        for s, visits in enumerate(self.router.split_ranges(ranges)):
+            if visits:
+                self.shards[s].range_delete_batch(
+                    [(lo, hi) for _, lo, hi in visits])
+        self._record("range_delete", len(ranges), t0, io0)
 
     def flush(self) -> None:
+        """Flush every shard's memtable to its level 0."""
         for sh in self.shards:
             sh.flush()
 
     # ------------------------------------------------------------- reads
     def get_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Vectorized point lookups; results in request order."""
+        """Vectorized point lookups; (found mask, values) in request
+        order, merged back from the per-shard batched read paths."""
         keys = np.asarray(keys, dtype=np.uint64)
-        t0 = time.perf_counter()
+        t0, io0 = time.perf_counter(), self._io_marks()
         found = np.zeros(len(keys), dtype=bool)
         vals = np.zeros(len(keys), dtype=np.uint64)
         for s, idx in enumerate(self.router.split(keys)):
@@ -87,50 +136,92 @@ class Engine:
             f, v = self.shards[s].get_batch(keys[idx])
             found[idx] = f
             vals[idx] = v
-        self.stats_.record("get", len(keys), time.perf_counter() - t0)
+        self._record("get", len(keys), t0, io0)
         return found, vals
 
     def get(self, key: int):
+        """Scalar point lookup; the value or None."""
         found, vals = self.get_batch(np.asarray([key], np.uint64))
         return int(vals[0]) if found[0] else None
 
     def range_scan(self, lo: int, hi: int):
         """All live entries in [lo, hi) across shards, sorted by key."""
-        t0 = time.perf_counter()
-        parts = [self.shards[s].range_scan(c_lo, c_hi)
-                 for s, c_lo, c_hi in self.router.shards_for_range(lo, hi)]
-        keys = np.concatenate([p[0] for p in parts]) if parts else \
-            np.zeros(0, np.uint64)
-        vals = np.concatenate([p[1] for p in parts]) if parts else \
-            np.zeros(0, np.uint64)
-        order = np.argsort(keys, kind="stable")
-        self.stats_.record("range_scan", 1, time.perf_counter() - t0)
-        return keys[order], vals[order]
+        return self.range_scan_batch([(lo, hi)])[0]
+
+    def range_scan_batch(self, ranges) -> list:
+        """Execute a batch of range scans; one sorted (keys, vals) pair
+        per requested [lo, hi), in request order.
+
+        Each shard serves its clipped visits in ONE pass over its tree
+        (``LSMTree.range_scan_batch``: shared memtable snapshot,
+        vectorized slice bounds, sorted-view merges, batched validity
+        filtering through the Pallas hooks).  Per-request results from
+        range-partitioned shards concatenate in slab order (already
+        globally sorted); hash-partitioned shards return disjoint sorted
+        sets that are merged as sorted views.
+        """
+        t0, io0 = time.perf_counter(), self._io_marks()
+        parts: list[list] = [[] for _ in ranges]
+        for s, visits in enumerate(self.router.split_ranges(ranges)):
+            if not visits:
+                continue
+            res = self.shards[s].range_scan_batch(
+                [(lo, hi) for _, lo, hi in visits])
+            for (rid, _, _), kv in zip(visits, res):
+                parts[rid].append(kv)
+        out = [self._merge_scan_parts(ps) for ps in parts]
+        self._record("range_scan", len(ranges), t0, io0)
+        return out
+
+    def _merge_scan_parts(self, parts: list) -> tuple[np.ndarray,
+                                                      np.ndarray]:
+        """One request's per-shard (keys, vals) parts -> one sorted pair.
+
+        Shards are visited in ascending order, so under range
+        partitioning the parts are consecutive key slabs and concatenate
+        sorted; under hash partitioning each key lives on exactly one
+        shard, so the parts are disjoint sorted sets and a sorted-view
+        merge (no re-sort) is exact.
+        """
+        if not parts:
+            return _EMPTY_KV
+        if len(parts) == 1:
+            return parts[0]
+        if self.router.partition == "range":
+            return (np.concatenate([p[0] for p in parts]),
+                    np.concatenate([p[1] for p in parts]))
+        return merge_runs(parts, empty=_EMPTY_KV)
 
     # --------------------------------------------------------- mixed ops
     def execute(self, ops: list[tuple]) -> list:
         """Execute a mixed op batch; results align with request order.
 
         ``ops`` entries: ``("put", key, val)``, ``("delete", key)``,
-        ``("get", key)``, ``("range_delete", lo, hi)``.  Returns one slot
-        per op: gets yield value-or-None, writes yield None.  Consecutive
-        same-kind ops destined for the same shard execute as one
-        vectorized sub-batch; per-shard arrival order (all that matters —
-        a key's history lives on one shard) is preserved.
+        ``("get", key)``, ``("range_delete", lo, hi)``,
+        ``("range_scan", lo, hi)``.  Returns one slot per op: gets yield
+        value-or-None, range scans yield a sorted (keys, vals) pair,
+        writes yield None.  Consecutive same-kind ops destined for the
+        same shard execute as one vectorized sub-batch; per-shard arrival
+        order (all that matters — a key's history lives on one shard) is
+        preserved.  Range ops visit every owning shard; a scan's
+        per-shard parts are merged back into one sorted view.
         """
         results: list = [None] * len(ops)
+        scan_parts: dict[int, list] = {}
         per_shard: list[list[tuple]] = [[] for _ in range(self.num_shards)]
         for i, op in enumerate(ops):
             kind = op[0]
             if kind in ("put", "delete", "get"):
                 per_shard[self.router.shard_of_scalar(op[1])].append(
                     (i, op))
-            elif kind == "range_delete":
+            elif kind in ("range_delete", "range_scan"):
+                if kind == "range_scan":
+                    scan_parts[i] = []
                 for s, lo, hi in self.router.shards_for_range(op[1], op[2]):
-                    per_shard[s].append((i, ("range_delete", lo, hi)))
+                    per_shard[s].append((i, (kind, lo, hi)))
             else:
                 raise ValueError(f"unknown op kind: {kind!r}")
-        t0 = time.perf_counter()
+        t0, io0 = time.perf_counter(), self._io_marks()
         for s, stream in enumerate(per_shard):
             sh = self.shards[s]
             j = 0
@@ -152,11 +243,18 @@ class Engine:
                         np.asarray([g[1][1] for g in group], np.uint64))
                     for (i, _), fi, vi in zip(group, f.tolist(), v.tolist()):
                         results[i] = vi if fi else None
+                elif kind == "range_scan":
+                    res = sh.range_scan_batch(
+                        [(lo, hi) for _, (_, lo, hi) in group])
+                    for (i, _), kv in zip(group, res):
+                        scan_parts[i].append(kv)
                 else:  # range_delete (already clipped per shard)
-                    for _, (_, lo, hi) in group:
-                        sh.range_delete(lo, hi)
+                    sh.range_delete_batch(
+                        [(lo, hi) for _, (_, lo, hi) in group])
                 j = k
-        self.stats_.record("mixed", len(ops), time.perf_counter() - t0)
+        for i, ps in scan_parts.items():
+            results[i] = self._merge_scan_parts(ps)
+        self._record("mixed", len(ops), t0, io0)
         return results
 
     # -------------------------------------------------------------- misc

@@ -70,33 +70,55 @@ class ShardExecutor:
 
     # ----------------------------------------------------------- writes
     def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        """Insert a batch of (key, val) pairs into the shard's tree."""
         self.tree.put_batch(keys, vals)
 
     def delete_batch(self, keys: np.ndarray) -> None:
+        """Point-delete a batch of keys (one tombstone each)."""
         self.tree.delete_batch(keys)
 
     def range_delete(self, lo: int, hi: int) -> None:
+        """Delete [lo, hi) via the tree's configured strategy."""
         self.tree.range_delete(lo, hi)
 
+    def range_delete_batch(self, ranges) -> None:
+        """Apply a batch of [lo, hi) range deletes in request order."""
+        for lo, hi in ranges:
+            self.tree.range_delete(lo, hi)
+
     def flush(self) -> None:
+        """Flush the shard's memtable (and LRR buffer) to level 0."""
         self.tree.flush()
 
     # ------------------------------------------------------------ reads
+    def _validity_fn(self):
+        """The GLORAN validity hook: batched ``is_deleted`` verdicts with
+        per-level probes routed through the interval Pallas kernel (when
+        gating admits a launch).  None for non-GLORAN strategies."""
+        t = self.tree
+        if t.strategy == "gloran" and t.gloran is not None:
+            return lambda k, s: t.gloran.is_deleted_batch(
+                k, s, query_fn=self._query_drtree_level)
+        return None
+
     def get_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Batched point lookups; (found, vals), order = request order."""
-        t = self.tree
-        validity_fn = None
-        if t.strategy == "gloran" and t.gloran is not None:
-            validity_fn = lambda k, s: t.gloran.is_deleted_batch(
-                k, s, query_fn=self._query_drtree_level)
-        return t.get_batch(
+        return self.tree.get_batch(
             np.asarray(keys, dtype=np.uint64),
             cache=self.cache if self.cache.enabled else None,
             bloom_fn=self._bloom_maybe,
-            validity_fn=validity_fn)
+            validity_fn=self._validity_fn())
 
     def range_scan(self, lo: int, hi: int):
-        return self.tree.range_scan(lo, hi)
+        """One range scan; (keys, vals) of the live entries in [lo, hi)."""
+        return self.range_scan_batch([(lo, hi)])[0]
+
+    def range_scan_batch(self, ranges) -> list:
+        """Batched range scans through the tree's one-pass batch path,
+        with GLORAN validity filtering on the kernel hook; one (keys,
+        vals) pair per requested [lo, hi), in request order."""
+        return self.tree.range_scan_batch(ranges,
+                                          validity_fn=self._validity_fn())
 
     # --------------------------------------------------- filter kernels
     def _bloom_maybe(self, lvl, keys: np.ndarray) -> np.ndarray:

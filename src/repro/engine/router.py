@@ -98,3 +98,22 @@ class ShardRouter:
             if c_lo < c_hi:
                 out.append((s, c_lo, c_hi))
         return out
+
+    def split_ranges(self, ranges) -> list[list[tuple[int, int, int]]]:
+        """Per-shard worklists for a batch of range ops.
+
+        Returns one list per shard of ``(rid, lo', hi')`` visits, where
+        ``rid`` indexes the request batch and [lo', hi') is the clipped
+        sub-range that shard must serve.  Within a shard, visits keep
+        request order (rid ascending), so batched range ops interleave
+        correctly with the shard's other work; callers reassemble
+        per-request results by rid.  Range partitioning visits only
+        overlapping slabs; hash partitioning broadcasts (see
+        ``shards_for_range``).
+        """
+        out: list[list[tuple[int, int, int]]] = [
+            [] for _ in range(self.num_shards)]
+        for rid, (lo, hi) in enumerate(ranges):
+            for s, c_lo, c_hi in self.shards_for_range(lo, hi):
+                out[s].append((rid, c_lo, c_hi))
+        return out

@@ -31,14 +31,28 @@ class KernelCounters:
 
 @dataclass
 class EngineStats:
+    """Per-op-class rollups of everything the engine executed.
+
+    ``record`` is called once per engine-level batch with the op class
+    (``get``, ``put``, ``delete``, ``range_scan``, ``range_delete``,
+    ``mixed``), the number of logical ops in the batch, its wall time,
+    and the simulated block I/O it charged — so latency AND I/O are
+    attributable per op class, not just in aggregate.
+    """
+
     ops: dict = field(default_factory=dict)        # op -> count
     wall: dict = field(default_factory=dict)       # op -> seconds
     batches: dict = field(default_factory=dict)    # op -> batch count
+    io_reads: dict = field(default_factory=dict)   # op -> blocks read
+    io_writes: dict = field(default_factory=dict)  # op -> blocks written
 
-    def record(self, op: str, n: int, seconds: float) -> None:
+    def record(self, op: str, n: int, seconds: float,
+               io_reads: int = 0, io_writes: int = 0) -> None:
         self.ops[op] = self.ops.get(op, 0) + int(n)
         self.wall[op] = self.wall.get(op, 0.0) + float(seconds)
         self.batches[op] = self.batches.get(op, 0) + 1
+        self.io_reads[op] = self.io_reads.get(op, 0) + int(io_reads)
+        self.io_writes[op] = self.io_writes.get(op, 0) + int(io_writes)
 
     def ops_per_sec(self, op: str) -> float:
         return self.ops.get(op, 0) / max(self.wall.get(op, 0.0), 1e-12)
@@ -47,7 +61,20 @@ class EngineStats:
         n = self.ops.get(op, 0)
         return 1e6 * self.wall.get(op, 0.0) / n if n else 0.0
 
+    def io_per_op(self, op: str) -> float:
+        """Blocks (read + written) charged per logical op of this class."""
+        n = self.ops.get(op, 0)
+        io = self.io_reads.get(op, 0) + self.io_writes.get(op, 0)
+        return io / n if n else 0.0
+
     def snapshot(self) -> dict:
+        """Schema: each entry maps op class -> value.
+
+        ``ops`` logical ops executed; ``batches`` engine-level calls;
+        ``wall_seconds`` total wall time; ``ops_per_sec`` / ``us_per_op``
+        derived throughput/latency; ``io_reads`` / ``io_writes`` blocks
+        charged while serving that class; ``io_per_op`` blocks per op.
+        """
         return {
             "ops": dict(self.ops),
             "wall_seconds": {k: round(v, 6) for k, v in self.wall.items()},
@@ -55,6 +82,9 @@ class EngineStats:
             "ops_per_sec": {k: round(self.ops_per_sec(k), 1)
                             for k in self.ops},
             "us_per_op": {k: round(self.us_per_op(k), 3) for k in self.ops},
+            "io_reads": dict(self.io_reads),
+            "io_writes": dict(self.io_writes),
+            "io_per_op": {k: round(self.io_per_op(k), 4) for k in self.ops},
         }
 
 

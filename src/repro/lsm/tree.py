@@ -22,6 +22,7 @@ import numpy as np
 from ..core.gloran import GloranConfig, GloranIndex
 from ..core.iostats import IOStats
 from .format import LSMConfig, PUT, TOMBSTONE
+from .merge import empty_run, merge_runs, newest_wins
 from .sstable import RangeTombstoneBlock, SSTable, build_sstable
 
 STRATEGIES = ("decomp", "lookup_delete", "scan_delete", "lrr", "gloran")
@@ -69,7 +70,7 @@ class LSMTree:
         vals = np.asarray(vals, dtype=np.uint64)
         seqs = self._next_seqs(len(keys))
         for k, s, v in zip(keys.tolist(), seqs.tolist(), vals.tolist()):
-            self.mem[k] = (s, 0, v)
+            self.mem[k] = (s, int(PUT), v)
             if len(self.mem) >= self.config.buffer_capacity:
                 self.flush()
 
@@ -80,7 +81,7 @@ class LSMTree:
         keys = np.asarray(keys, dtype=np.uint64)
         seqs = self._next_seqs(len(keys))
         for k, s in zip(keys.tolist(), seqs.tolist()):
-            self.mem[k] = (s, 1, 0)
+            self.mem[k] = (s, int(TOMBSTONE), 0)
             if len(self.mem) >= self.config.buffer_capacity:
                 self.flush()
 
@@ -210,65 +211,97 @@ class LSMTree:
                 out_found[sub] = False
         return out_found, out_vals
 
-    def range_scan(self, lo: int, hi: int):
+    def _mem_sorted(self):
+        """Key-sorted snapshot of the memtable as a 4-array run."""
+        m = len(self.mem)
+        if m == 0:
+            return empty_run()
+        keys = np.fromiter(self.mem.keys(), np.uint64, m)
+        rows = np.array(list(self.mem.values()), dtype=np.uint64)
+        order = np.argsort(keys)
+        return (keys[order], rows[order, 0],
+                rows[order, 1].astype(np.uint8), rows[order, 2])
+
+    def range_scan(self, lo: int, hi: int, *, validity_fn=None):
         """All live entries with lo <= key < hi. Returns (keys, vals)."""
-        lo, hi = int(lo), int(hi)
-        ks, ss, ts, vs = [], [], [], []
-        for k, (s, t, v) in self.mem.items():
-            if lo <= k < hi:
-                ks.append(k), ss.append(s), ts.append(t), vs.append(v)
-        parts = [(np.array(ks, dtype=np.uint64), np.array(ss, np.uint64),
-                  np.array(ts, np.uint8), np.array(vs, np.uint64))]
-        for lvl in self.levels:
-            if lvl is not None and len(lvl):
-                parts.append(lvl.range_slice(lo, hi, self.io))
-        keys = np.concatenate([p[0] for p in parts])
-        seqs = np.concatenate([p[1] for p in parts])
-        typs = np.concatenate([p[2] for p in parts])
-        vals = np.concatenate([p[3] for p in parts])
-        if len(keys) == 0:
-            return keys, vals
-        order = np.lexsort((seqs, keys))
-        keys, seqs, typs, vals = keys[order], seqs[order], typs[order], vals[order]
-        newest = np.ones(len(keys), dtype=bool)
-        newest[:-1] = keys[1:] != keys[:-1]
-        keys, seqs, typs, vals = (keys[newest], seqs[newest], typs[newest],
-                                  vals[newest])
-        live = typs == 0
-        if self.strategy == "lrr":
-            rt_max = np.zeros(len(keys), dtype=np.uint64)
-            for lo_, hi_, s_ in self.mem_rts:
-                m = (keys >= lo_) & (keys < hi_)
-                rt_max[m] = np.maximum(rt_max[m], np.uint64(s_))
-            for rtb in self.level_rts:
-                if len(rtb):
-                    # Iterator over the rt block: sequential stream of
-                    # tombstones with start < hi.
-                    cnt = int(np.searchsorted(rtb.starts, np.uint64(hi)))
-                    self.io.read_blocks(
-                        1 + (cnt * self.config.range_tombstone_size) //
-                        self.config.block_size, tag="rt_scan")
-                    rt_max = np.maximum(rt_max, rtb.max_covering_batch(keys))
-            live &= ~(rt_max > seqs)
-        elif self.strategy == "gloran" and len(keys):
-            # Iterators over each DR-tree level stream areas overlapping
-            # the scan range (sorted + sequential on disk).
-            idx = self.gloran.index
-            for lvl in getattr(idx, "levels", []):
-                if lvl is None:
-                    continue
-                a = lvl.areas if hasattr(lvl, "areas") else None
-                if a is None or len(a) == 0:
-                    continue
-                i0 = int(np.searchsorted(a.hi, np.uint64(lo), side="right"))
-                i1 = int(np.searchsorted(a.lo, np.uint64(hi)))
-                cnt = max(0, i1 - i0)
+        return self.range_scan_batch([(lo, hi)],
+                                     validity_fn=validity_fn)[0]
+
+    def range_scan_batch(self, ranges, *, validity_fn=None):
+        """Execute many range scans in one pass over the tree.
+
+        Each [lo, hi) produces the same (keys, vals) pair a per-call
+        ``range_scan`` would, but the shared work is batched: the
+        memtable is snapshotted/sorted once, per-level slice bounds and
+        sequential-read charges are computed vectorized across all
+        ranges, each range's slices are combined with a REMIX-style
+        sorted-view merge (no per-scan lexsort), and LRR/GLORAN validity
+        filtering runs once over the concatenated candidates of every
+        range.  ``validity_fn(keys, seqs) -> dead mask`` optionally
+        replaces the GLORAN probe (``repro.engine`` supplies the Pallas
+        interval-kernel path), exactly like ``get_batch``.
+        """
+        ranges = [(int(lo), int(hi)) for lo, hi in ranges]
+        nr = len(ranges)
+        if nr == 0:
+            return []
+        los = np.array([r[0] for r in ranges], dtype=np.uint64)
+        his = np.array([r[1] for r in ranges], dtype=np.uint64)
+        mem = self._mem_sorted()
+        m_lo = np.searchsorted(mem[0], los)
+        m_hi = np.searchsorted(mem[0], his)
+        per_level = [lvl.range_slice_many(los, his, self.io)
+                     for lvl in self.levels
+                     if lvl is not None and len(lvl)]
+        merged = []
+        for j in range(nr):
+            parts = [tuple(x[m_lo[j]:m_hi[j]] for x in mem)]
+            parts += [slices[j] for slices in per_level]
+            merged.append(newest_wins(*merge_runs(parts)))
+        live = [m[2] == PUT for m in merged]
+        # Validity filtering, batched across every non-empty range.
+        nz = [j for j in range(nr) if len(merged[j][0])]
+        if nz and self.strategy in ("lrr", "gloran"):
+            cat_keys = np.concatenate([merged[j][0] for j in nz])
+            cat_seqs = np.concatenate([merged[j][1] for j in nz])
+            if self.strategy == "lrr":
+                dead = self._lrr_scan_dead(cat_keys, cat_seqs, his[nz])
+            else:
+                for j in nz:
+                    # Iterators over each index level stream the areas
+                    # overlapping the scan range (sorted + sequential).
+                    self.gloran.charge_range_scan(
+                        ranges[j][0], ranges[j][1], self.config.block_size)
+                is_dead = validity_fn or self.gloran.is_deleted_batch
+                dead = is_dead(cat_keys, cat_seqs)
+            off = 0
+            for j in nz:
+                n = len(merged[j][0])
+                live[j] &= ~dead[off:off + n]
+                off += n
+        return [(m[0][lv], m[3][lv]) for m, lv in zip(merged, live)]
+
+    def _lrr_scan_dead(self, keys: np.ndarray, seqs: np.ndarray,
+                       his: np.ndarray) -> np.ndarray:
+        """Max-covering range-tombstone filter for scan candidates.
+
+        ``his`` holds the scan upper bounds (one per range) so each
+        level's tombstone-iterator charge — a sequential stream of the
+        tombstones with start < hi, per range — matches the per-call
+        path exactly.
+        """
+        rt_max = np.zeros(len(keys), dtype=np.uint64)
+        for lo_, hi_, s_ in self.mem_rts:
+            m = (keys >= lo_) & (keys < hi_)
+            rt_max[m] = np.maximum(rt_max[m], np.uint64(s_))
+        for rtb in self.level_rts:
+            if len(rtb):
+                cnts = np.searchsorted(rtb.starts, his)
                 self.io.read_blocks(
-                    1 + (cnt * 2 * self.gloran.config.index.key_size) //
-                    self.config.block_size, tag="gloran_scan")
-            dead = self.gloran.is_deleted_batch(keys, seqs)
-            live &= ~dead
-        return keys[live], vals[live]
+                    int((1 + (cnts * self.config.range_tombstone_size) //
+                         self.config.block_size).sum()), tag="rt_scan")
+                rt_max = np.maximum(rt_max, rtb.max_covering_batch(keys))
+        return rt_max > seqs
 
     # -------------------------------------------------- flush / compaction
     def flush(self) -> None:

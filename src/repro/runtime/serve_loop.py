@@ -96,6 +96,31 @@ class SessionRegistry:
         self.engine.range_delete(first_session << PAGE_BITS,
                                  last_session << PAGE_BITS)
 
+    def expire_spans(self, spans) -> None:
+        """Expire many [first, last) session spans as ONE batched
+        range-delete — one routed engine call, e.g. the reaper draining
+        a whole eviction backlog per scheduler tick."""
+        self.engine.range_delete_batch(
+            [(int(f) << PAGE_BITS, int(l) << PAGE_BITS)
+             for f, l in spans])
+
+    def live_pages(self, session_id: int) -> tuple[np.ndarray, np.ndarray]:
+        """(pages, values) still live for one session — an engine range
+        scan over the session's key slab (session migration / debugging
+        reads the registry this way)."""
+        lo = session_id << PAGE_BITS
+        keys, vals = self.engine.range_scan(lo, lo + (1 << PAGE_BITS))
+        return keys & np.uint64((1 << PAGE_BITS) - 1), vals
+
+    def live_pages_batch(self, session_ids) -> list:
+        """Batched ``live_pages``: one engine ``range_scan_batch`` for
+        many sessions; returns one (pages, values) pair per session."""
+        res = self.engine.range_scan_batch(
+            [(int(s) << PAGE_BITS, (int(s) + 1) << PAGE_BITS)
+             for s in session_ids])
+        mask = np.uint64((1 << PAGE_BITS) - 1)
+        return [(k & mask, v) for k, v in res]
+
     def flush(self) -> None:
         self.engine.flush()
 

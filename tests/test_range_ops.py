@@ -1,0 +1,306 @@
+"""Batched range ops through the engine: scan parity with the bare tree
+across every strategy and shard count, batched scans/deletes, sorted-view
+merge primitives, and per-op-class stats rollups."""
+
+import numpy as np
+import pytest
+
+from repro.core import GloranConfig, LSMDRTreeConfig, RAEConfig
+from repro.engine import Engine, EngineConfig
+from repro.lsm import LSMConfig, LSMTree, STRATEGIES
+from repro.lsm.merge import merge_runs, merge_two, newest_wins
+
+UNIVERSE = 1 << 20
+
+
+def small_cfg(**kw):
+    d = dict(buffer_capacity=64, size_ratio=3, key_size=16, value_size=48,
+             block_size=512, key_universe=UNIVERSE)
+    d.update(kw)
+    return LSMConfig(**d)
+
+
+def small_gloran():
+    return GloranConfig(index=LSMDRTreeConfig(buffer_capacity=16,
+                                              size_ratio=3, key_size=16,
+                                              block_size=512),
+                        eve=RAEConfig(capacity=64, key_universe=UNIVERSE))
+
+
+def kernel_cfg(**kw):
+    d = dict(cache_blocks=512, kernel_min_batch=1, kernel_min_areas=1,
+             kernel_min_filter=1)
+    d.update(kw)
+    return EngineConfig(**d)
+
+
+def make_ops(rng, n, universe=2000, rdel_ratio=0.08, max_len=100):
+    ops = []
+    for _ in range(n):
+        r = rng.random()
+        if r < rdel_ratio:
+            lo = int(rng.integers(0, universe - 2))
+            ops.append(("rdel", lo, lo + int(rng.integers(1, max_len))))
+        elif r < rdel_ratio + 0.05:
+            ops.append(("del", int(rng.integers(0, universe))))
+        else:
+            ops.append(("put", int(rng.integers(0, universe)),
+                        int(rng.integers(1, 1 << 30))))
+    return ops
+
+
+def apply_ops(store, ops):
+    for op in ops:
+        if op[0] == "put":
+            store.put(op[1], op[2])
+        elif op[0] == "del":
+            store.delete(op[1])
+        else:
+            store.range_delete(op[1], op[2])
+
+
+def scan_ranges(rng, n=12, universe=2000):
+    """Random scan ranges, always including shard-slab straddlers for
+    every shard count under test (slab width = UNIVERSE / shards)."""
+    out = []
+    for shards in (2, 4):
+        width = -(-UNIVERSE // shards)
+        for s in range(1, shards):
+            out.append((s * width - 40, s * width + 40))  # straddles slab s
+    out.append((0, universe))  # everything
+    for _ in range(n):
+        lo = int(rng.integers(0, universe - 1))
+        out.append((lo, lo + int(rng.integers(1, 300))))
+    return out
+
+
+# ----------------------------------------------------------- merge module
+class TestSortedViewMerge:
+    def test_merge_two_interleaves_sorted(self):
+        rng = np.random.default_rng(0)
+        a = np.sort(rng.integers(0, 1000, 500).astype(np.uint64))
+        b = np.sort(rng.integers(0, 1000, 300).astype(np.uint64))
+        (m,) = merge_two((a,), (b,))
+        np.testing.assert_array_equal(m, np.sort(np.concatenate([a, b])))
+
+    def test_merge_runs_equals_lexsort_path(self):
+        rng = np.random.default_rng(1)
+        parts = []
+        for _ in range(5):
+            k = np.unique(rng.integers(0, 400, 120).astype(np.uint64))
+            s = rng.integers(1, 1 << 40, len(k)).astype(np.uint64)
+            t = rng.integers(0, 2, len(k)).astype(np.uint8)
+            v = rng.integers(0, 1 << 40, len(k)).astype(np.uint64)
+            parts.append((k, s, t, v))
+        keys, seqs, typs, vals = merge_runs(parts)
+        cat = [np.concatenate([p[i] for p in parts]) for i in range(4)]
+        order = np.lexsort((cat[1], cat[0]))
+        np.testing.assert_array_equal(keys, cat[0][order])
+        # seq order within duplicate-key groups is irrelevant: newest_wins
+        # resolves by max seq, which lexsort's last-in-group also picks.
+        mk, ms, mt, mv = newest_wins(keys, seqs, typs, vals)
+        newest = np.ones(len(order), dtype=bool)
+        sk = cat[0][order]
+        newest[:-1] = sk[1:] != sk[:-1]
+        np.testing.assert_array_equal(mk, sk[newest])
+        np.testing.assert_array_equal(ms, cat[1][order][newest])
+        np.testing.assert_array_equal(mv, cat[3][order][newest])
+
+    def test_empty_parts(self):
+        keys, seqs, typs, vals = merge_runs([])
+        assert len(keys) == len(seqs) == len(typs) == len(vals) == 0
+
+
+# ----------------------------------------------------- engine scan parity
+class TestRangeScanParity:
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize("num_shards", [1, 2, 4])
+    def test_engine_scan_identical_to_bare_tree(self, strategy,
+                                                num_shards):
+        """``Engine.range_scan`` is byte-identical to bare
+        ``LSMTree.range_scan`` for every strategy x shard count,
+        including scans straddling shard slab boundaries."""
+        rng = np.random.default_rng(31)
+        ops = make_ops(rng, 700)
+        g = small_gloran() if strategy == "gloran" else None
+        tree = LSMTree(small_cfg(), strategy=strategy, gloran_config=g)
+        eng = Engine(num_shards=num_shards, strategy=strategy,
+                     lsm_config=small_cfg(), gloran_config=g,
+                     config=kernel_cfg(partition="range"))
+        apply_ops(tree, ops)
+        apply_ops(eng, ops)
+        for lo, hi in scan_ranges(rng):
+            tk, tv = tree.range_scan(lo, hi)
+            ek, ev = eng.range_scan(lo, hi)
+            assert ek.dtype == tk.dtype and ev.dtype == tv.dtype
+            assert tk.tobytes() == ek.tobytes(), (strategy, num_shards,
+                                                  lo, hi)
+            assert tv.tobytes() == ev.tobytes(), (strategy, num_shards,
+                                                  lo, hi)
+
+    @pytest.mark.parametrize("num_shards", [2, 4])
+    def test_full_universe_scan_crosses_populated_slabs(self, num_shards):
+        """Data spread over the whole key universe: every shard owns
+        entries, and scans straddling populated slab boundaries must
+        come back as one globally sorted view (the multi-part slab
+        concatenation in ``Engine._merge_scan_parts``)."""
+        rng = np.random.default_rng(53)
+        ops = make_ops(rng, 700, universe=UNIVERSE, max_len=3000)
+        tree = LSMTree(small_cfg(), strategy="gloran",
+                       gloran_config=small_gloran())
+        eng = Engine(num_shards=num_shards, strategy="gloran",
+                     lsm_config=small_cfg(), gloran_config=small_gloran(),
+                     config=kernel_cfg(partition="range"))
+        apply_ops(tree, ops)
+        apply_ops(eng, ops)
+        width = -(-UNIVERSE // num_shards)
+        ranges = [(s * width - 5000, s * width + 5000)
+                  for s in range(1, num_shards)]
+        ranges += [(0, UNIVERSE), (width // 2, UNIVERSE - width // 2)]
+        for lo, hi in ranges:
+            tk, tv = tree.range_scan(lo, hi)
+            ek, ev = eng.range_scan(lo, hi)
+            assert len(tk), (num_shards, lo, hi)  # scans hit real data
+            assert tk.tobytes() == ek.tobytes(), (num_shards, lo, hi)
+            assert tv.tobytes() == ev.tobytes(), (num_shards, lo, hi)
+        # The wide scans really did visit every shard.
+        multi = eng.router.shards_for_range(0, UNIVERSE)
+        assert len(multi) == num_shards
+
+    @pytest.mark.parametrize("num_shards", [1, 2, 4])
+    def test_hash_partition_scan_parity(self, num_shards):
+        rng = np.random.default_rng(37)
+        ops = make_ops(rng, 700)
+        tree = LSMTree(small_cfg(), strategy="gloran",
+                       gloran_config=small_gloran())
+        eng = Engine(num_shards=num_shards, strategy="gloran",
+                     lsm_config=small_cfg(), gloran_config=small_gloran(),
+                     config=kernel_cfg(partition="hash"))
+        apply_ops(tree, ops)
+        apply_ops(eng, ops)
+        for lo, hi in scan_ranges(rng):
+            tk, tv = tree.range_scan(lo, hi)
+            ek, ev = eng.range_scan(lo, hi)
+            assert tk.tobytes() == ek.tobytes(), (num_shards, lo, hi)
+            assert tv.tobytes() == ev.tobytes(), (num_shards, lo, hi)
+
+
+# --------------------------------------------------------- batched paths
+class TestBatchedRangeOps:
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_tree_scan_batch_equals_per_call(self, strategy):
+        rng = np.random.default_rng(41)
+        g = small_gloran() if strategy == "gloran" else None
+        tree = LSMTree(small_cfg(), strategy=strategy, gloran_config=g)
+        apply_ops(tree, make_ops(rng, 600))
+        ranges = scan_ranges(rng)
+        batched = tree.range_scan_batch(ranges)
+        for (lo, hi), (bk, bv) in zip(ranges, batched):
+            k, v = tree.range_scan(lo, hi)
+            np.testing.assert_array_equal(k, bk)
+            np.testing.assert_array_equal(v, bv)
+
+    @pytest.mark.parametrize("partition", ["hash", "range"])
+    def test_engine_scan_batch_equals_per_call(self, partition):
+        rng = np.random.default_rng(43)
+        eng = Engine(num_shards=4, strategy="gloran",
+                     lsm_config=small_cfg(), gloran_config=small_gloran(),
+                     config=kernel_cfg(partition=partition))
+        apply_ops(eng, make_ops(rng, 600))
+        ranges = scan_ranges(rng)
+        batched = eng.range_scan_batch(ranges)
+        for (lo, hi), (bk, bv) in zip(ranges, batched):
+            k, v = eng.range_scan(lo, hi)
+            np.testing.assert_array_equal(k, bk)
+            np.testing.assert_array_equal(v, bv)
+
+    @pytest.mark.parametrize("partition", ["hash", "range"])
+    def test_range_delete_batch_equals_sequential(self, partition):
+        cfgs = dict(strategy="gloran", lsm_config=small_cfg(),
+                    gloran_config=small_gloran(),
+                    config=EngineConfig(partition=partition))
+        a = Engine(num_shards=3, **cfgs)
+        b = Engine(num_shards=3, **cfgs)
+        keys = np.arange(0, 4000, dtype=np.uint64)
+        for e in (a, b):
+            e.put_batch(keys, keys + np.uint64(9))
+        spans = [(100, 300), (250, 900), (3500, 4200), (50, 60)]
+        a.range_delete_batch(spans)
+        for lo, hi in spans:
+            b.range_delete(lo, hi)
+        fa, va = a.get_batch(keys)
+        fb, vb = b.get_batch(keys)
+        np.testing.assert_array_equal(fa, fb)
+        np.testing.assert_array_equal(va[fa], vb[fb])
+
+    def test_execute_routes_range_scans(self):
+        eng = Engine(num_shards=4, strategy="gloran",
+                     lsm_config=small_cfg(), gloran_config=small_gloran())
+        res = eng.execute([
+            ("put", 5, 50), ("put", 9, 90), ("put", 14, 140),
+            ("range_scan", 0, 20),
+            ("range_delete", 0, 10),
+            ("range_scan", 0, 20), ("get", 14),
+        ])
+        k0, v0 = res[3]
+        assert k0.tolist() == [5, 9, 14] and v0.tolist() == [50, 90, 140]
+        k1, v1 = res[5]
+        assert k1.tolist() == [14] and v1.tolist() == [140]
+        assert res[6] == 140
+
+
+# ------------------------------------------------------------ stats + io
+class TestPerOpStats:
+    def test_io_and_latency_rollup_per_op_class(self):
+        eng = Engine(num_shards=2, strategy="gloran",
+                     lsm_config=small_cfg(), gloran_config=small_gloran())
+        keys = np.arange(0, 2000, dtype=np.uint64)
+        eng.put_batch(keys, keys)
+        eng.flush()
+        eng.range_delete(100, 400)
+        eng.get_batch(keys[:500])
+        eng.range_scan(0, 1500)
+        snap = eng.stats()["engine"]
+        for op in ("put", "get", "range_scan", "range_delete"):
+            assert snap["ops"][op] > 0
+            assert op in snap["io_reads"] and op in snap["io_writes"]
+            assert op in snap["io_per_op"] and op in snap["us_per_op"]
+        # Scans and gets charge reads; the flushed puts charged writes.
+        assert snap["io_reads"]["range_scan"] > 0
+        assert snap["io_reads"]["get"] > 0
+        assert snap["io_writes"]["put"] > 0
+
+    def test_scan_validity_goes_through_interval_kernel(self):
+        eng = Engine(num_shards=1, strategy="gloran",
+                     lsm_config=small_cfg(), gloran_config=small_gloran(),
+                     config=kernel_cfg())
+        keys = np.arange(0, 3000, dtype=np.uint64)
+        eng.put_batch(keys, keys + np.uint64(1))
+        for lo in range(0, 2000, 40):
+            eng.range_delete(lo, lo + 11)
+        eng.flush()
+        k0 = eng.kernel_counters.interval_calls
+        ks, vs = eng.range_scan(0, 3000)
+        assert eng.kernel_counters.interval_calls > k0
+        live = np.ones(3000, dtype=bool)
+        for lo in range(0, 2000, 40):
+            live[lo:lo + 11] = False
+        np.testing.assert_array_equal(ks, keys[live])
+        np.testing.assert_array_equal(vs, keys[live] + np.uint64(1))
+
+
+# --------------------------------------------------------- registry APIs
+class TestRegistryRangeOps:
+    def test_live_pages_and_expire_spans(self):
+        from repro.runtime import SessionRegistry
+        reg = SessionRegistry(strategy="gloran", num_shards=2)
+        for sid in range(40):
+            reg.register(sid, np.arange(4), np.arange(4) + sid * 10)
+        reg.expire_spans([(0, 10), (20, 25)])
+        pages, vals = reg.live_pages(12)
+        assert pages.tolist() == [0, 1, 2, 3]
+        assert vals.tolist() == [120, 121, 122, 123]
+        out = reg.live_pages_batch([5, 12, 22])
+        assert len(out[0][0]) == 0  # expired by (0, 10)
+        assert out[1][0].tolist() == [0, 1, 2, 3]
+        assert len(out[2][0]) == 0  # expired by (20, 25)
