@@ -1,0 +1,359 @@
+"""Mixed-workload benchmark (fig9 scale) -> BENCH_mixed.json.
+
+The paper's headline scenario: point gets, range scans, and range
+deletes arriving interleaved in one op stream (§6, fig9).  Every batch
+goes through the typed plan/submit API — ``OpBatch`` construction,
+``Planner`` compilation, ``Engine.submit`` — sweeping the get/scan/
+range-delete mix ratio, the shard count, and pipelined vs serial shard
+execution, with a submit-ahead window of 2 so planning batch n+1
+overlaps executing batch n (the serve-loop pattern).
+
+    PYTHONPATH=src python benchmarks/mixed_bench.py
+
+Env:
+    REPRO_MIXED_BENCH_SMOKE=1   ~20 s subset (scripts/check.sh)
+    REPRO_BENCH_SCALE=full      ~4x workload
+    REPRO_BENCH_OUT=path.json   output path (default BENCH_mixed.json)
+
+Throughput is reported two ways, extending this repo's existing
+device-grounded convention (``WorkloadResult.modeled_ops_per_sec``:
+the simulator *counts* block I/Os instead of sleeping on them, so raw
+wall-clock alone under-charges I/O):
+
+  wall      raw host wall-clock for both execution modes, measured with
+            interleaved repetitions and every kernel shape pre-warmed.
+            Python's GIL serializes the simulator's host compute, so on
+            a small CI box the pipelined wall number mostly reflects
+            thread scheduling, not the architecture — it is published
+            for exactly that transparency.
+  modeled   the architecture projection the per-shard wall/stall
+            ledgers exist to make observable.  Both sides derive from
+            the SAME serial run (identical plans, identical per-shard
+            work):
+
+              serial    = measured wall + (fleet-total I/Os) * T_IO
+                          (one thread executes every shard plan and
+                          issues every I/O in sequence)
+              pipelined = max over shards of (that shard's busy seconds
+                          + its I/Os * T_IO), plus the measured
+                          non-overlapped coordination time (plan +
+                          merge-back: serial wall minus the shards'
+                          busy sum)
+                          (each shard runs on its own executor and
+                          drives its own I/O queue; the critical path
+                          is the busiest shard)
+
+            T_IO = 20us, a 4 KB NVMe random read — the paper's
+            hardware, same constant as ``repro.baselines``.
+
+The acceptance figure is the modeled mixed-batch speedup, pipelined vs
+serial, geomean across mixes at the maximum shard count; per-mix rows
+carry both modeled and measured-wall numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import GloranConfig, LSMDRTreeConfig, RAEConfig
+from repro.engine import Engine, EngineConfig, OpBatch
+from repro.lsm import LSMConfig
+
+SMOKE = os.environ.get("REPRO_MIXED_BENCH_SMOKE") == "1"
+SCALE = 4 if os.environ.get("REPRO_BENCH_SCALE") == "full" else 1
+OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_mixed.json")
+
+UNIVERSE = 1 << 22
+SCAN_ENTRIES = 256  # target live entries per scan (span = entries/density)
+RDEL_LEN = 512  # keyspace span of one range delete (a session-block expiry)
+GET_HIT_FRAC = 0.85  # gets probing live keys (serving-registry pattern)
+BURST = 64  # mean same-kind arrival burst length
+DEPTH = 2  # submit-ahead window (plan n+1 while n executes)
+T_IO = 20e-6  # seconds per counted block I/O (4 KB NVMe random read,
+#               same device grounding as repro.baselines.WorkloadResult)
+
+# (get, range_scan, range_delete) op fractions per mix.
+MIXES = {
+    "read_mostly": (0.94, 0.04, 0.02),
+    "scan_heavy": (0.65, 0.30, 0.05),
+    "delete_heavy": (0.85, 0.05, 0.10),
+}
+
+if SMOKE:
+    PRELOAD = 48_000
+    N_RDEL = 300
+    SHARDS = (4,)
+    BATCH = 8192
+    ROUNDS = 1
+    REPS = 2
+    MIX_KEYS = ("read_mostly", "delete_heavy")
+else:
+    PRELOAD = 120_000 * SCALE
+    N_RDEL = 1200 * SCALE
+    SHARDS = (1, 2, 4)
+    BATCH = 8192
+    ROUNDS = 2
+    REPS = 3
+    MIX_KEYS = tuple(MIXES)
+
+
+def lsm_cfg() -> LSMConfig:
+    return LSMConfig(buffer_capacity=4096, key_size=16, value_size=48,
+                     key_universe=UNIVERSE)
+
+
+def gloran_cfg() -> GloranConfig:
+    return GloranConfig(
+        index=LSMDRTreeConfig(buffer_capacity=512, size_ratio=10,
+                              key_size=16),
+        eve=RAEConfig(capacity=100_000, key_universe=UNIVERSE))
+
+
+def engine_cfg(pipeline: bool) -> EngineConfig:
+    # Kernel-heavy gating (the TPU-deployment stand-in, as in
+    # engine_bench's fused-filter rows): every SSTable filter and
+    # DR-tree level probe runs through the Pallas kernels, so the
+    # pipeline's win — overlapping per-shard kernel launches instead of
+    # queueing them behind one Python thread — is what gets measured.
+    # The block cache stays off: its per-block host loop is serial
+    # Python, which engine_bench measures separately.
+    return EngineConfig(partition="range", pipeline=pipeline,
+                        cache_blocks=0, kernel_min_batch=32,
+                        kernel_min_areas=32, kernel_min_filter=512)
+
+
+def preload_keys() -> np.ndarray:
+    return np.random.default_rng(5).integers(
+        0, UNIVERSE, size=PRELOAD).astype(np.uint64)
+
+
+def make_engine(shards: int, pipeline: bool) -> Engine:
+    eng = Engine(num_shards=shards, strategy="gloran",
+                 lsm_config=lsm_cfg(), gloran_config=gloran_cfg(),
+                 config=engine_cfg(pipeline))
+    keys = preload_keys()
+    for i in range(0, len(keys), 8192):
+        kk = keys[i:i + 8192]
+        eng.put_batch(kk, kk + np.uint64(1))
+    rng = np.random.default_rng(6)
+    rdels = rng.integers(0, UNIVERSE - RDEL_LEN - 1, size=N_RDEL)
+    eng.range_delete_batch([(int(lo), int(lo) + RDEL_LEN)
+                            for lo in rdels])
+    eng.flush()
+    return eng
+
+
+def mixed_batches(mix: tuple, rounds: int, seed: int) -> list[OpBatch]:
+    """One interleaved OpBatch per round (+1 warm), same for every
+    engine configuration (seeded).
+
+    Kinds arrive in bursts (geometric, mean ``BURST``) — the serving
+    tier's arrival pattern: a scheduler tick issues a run of page
+    lookups, a scan job a run of scans, the expiry reaper a run of range
+    deletes.  Expected op fractions still match ``mix`` (every burst has
+    the same mean length).  Gets probe live keys with probability
+    ``GET_HIT_FRAC`` (a registry looks up sessions it registered); scan
+    spans are sized to cover ~``SCAN_ENTRIES`` live entries.
+    """
+    rng = np.random.default_rng(seed)
+    probs = np.asarray(mix, dtype=float)
+    live = preload_keys()
+    scan_len = SCAN_ENTRIES * UNIVERSE // PRELOAD
+    out = []
+    for _ in range(rounds + 1):
+        ops: list[tuple] = []
+        while len(ops) < BATCH:
+            kind = int(rng.choice(3, p=probs))
+            burst = min(int(rng.geometric(1.0 / BURST)),
+                        BATCH - len(ops))
+            if kind == 0:
+                hot = rng.random(burst) < GET_HIT_FRAC
+                keys = np.where(hot, live[rng.integers(0, len(live),
+                                                       size=burst)],
+                                rng.integers(0, UNIVERSE, size=burst)
+                                .astype(np.uint64))
+                for k in keys.tolist():
+                    ops.append(("get", int(k)))
+            elif kind == 1:
+                for lo in rng.integers(0, UNIVERSE - scan_len - 1,
+                                       size=burst).tolist():
+                    ops.append(("range_scan", lo, lo + scan_len))
+            else:
+                for lo in rng.integers(0, UNIVERSE - RDEL_LEN - 1,
+                                       size=burst).tolist():
+                    ops.append(("range_delete", lo, lo + RDEL_LEN))
+        out.append(OpBatch.from_ops(ops))
+    return out
+
+
+def run_batches(eng: Engine, batches: list[OpBatch]) -> float:
+    """Submit with a depth-``DEPTH`` in-flight window; returns seconds."""
+    t0 = time.perf_counter()
+    inflight = []
+    for b in batches:
+        inflight.append(eng.submit(b))
+        if len(inflight) >= DEPTH:
+            inflight.pop(0).wait()
+    for p in inflight:
+        p.wait()
+    return time.perf_counter() - t0
+
+
+def shard_io(eng: Engine) -> list[int]:
+    return [sh.tree.io.reads + sh.tree.io.writes for sh in eng.shards]
+
+
+def _shard_busy(eng: Engine) -> list[float]:
+    return [eng.stats_.shard_wall.get(s, 0.0)
+            for s in range(eng.num_shards)]
+
+
+def _measure(eng: Engine, batches: list[OpBatch]):
+    """One measured rep; (wall s, per-shard I/Os, per-shard busy s)."""
+    io0, b0 = shard_io(eng), _shard_busy(eng)
+    dt = run_batches(eng, batches)
+    ios = [b - a for a, b in zip(io0, shard_io(eng))]
+    busy = [b - a for a, b in zip(b0, _shard_busy(eng))]
+    return dt, ios, busy
+
+
+def bench_cell(mix_name: str, shards: int) -> tuple[dict, dict]:
+    """One (mix, shard-count) cell: serial + pipelined rows.
+
+    The two engines are built identically and the measurement reps
+    alternate serial/pipelined on the same per-rep batches, so bursty
+    host interference (shared CI cores) hits both sides alike; the
+    reported speedup is the median per-rep ratio.
+    """
+    engines = {False: make_engine(shards, False),
+               True: make_engine(shards, True)}
+    all_batches = mixed_batches(MIXES[mix_name], ROUNDS * REPS, seed=71)
+    # Pre-warm every kernel shape the measured batches will launch on a
+    # throwaway engine: jit compilation is process-global and one-time,
+    # so neither measured side may pay it (whichever ran first would
+    # otherwise foot the whole compile bill and look slower).
+    scratch = make_engine(shards, True)
+    for b in all_batches:
+        scratch.submit(b).wait()
+    del scratch
+    for eng in engines.values():
+        eng.submit(all_batches[0]).wait()  # warm caches + state
+    n = ROUNDS * BATCH
+    walls: dict = {False: [], True: []}
+    m_serial: list[float] = []
+    m_piped: list[float] = []
+    cell_ios = None
+    for rep in range(REPS):
+        rep_batches = all_batches[1 + rep * ROUNDS:
+                                  1 + (rep + 1) * ROUNDS]
+        for pl in (False, True):
+            dt, ios, busy = _measure(engines[pl], rep_batches)
+            walls[pl].append(dt)
+            if pl:
+                continue
+            # Architecture projection from the serial run's per-shard
+            # ledgers (identical plans either way; see module
+            # docstring): serial serializes all busy time and all I/O
+            # on one thread; pipelined's critical path is the busiest
+            # shard plus the non-overlapped plan/merge coordination.
+            cell_ios = ios if cell_ios is None else \
+                [a + b for a, b in zip(cell_ios, ios)]
+            coord = max(dt - sum(busy), 0.0)
+            m_serial.append(dt + sum(ios) * T_IO)
+            m_piped.append(
+                max(b + i * T_IO for b, i in zip(busy, ios)) + coord)
+    modeled = {False: m_serial, True: m_piped}
+    rows = {}
+    for pl in (False, True):
+        eng = engines[pl]
+        snap = eng.stats()["engine"]
+        stall = sum(snap["shard_stall_seconds"].values())
+        wall = sum(snap["shard_wall_seconds"].values())
+        rows[pl] = {
+            "mix": mix_name,
+            "shards": shards,
+            "pipeline": pl,
+            "wall_ops_per_sec": round(REPS * n / sum(walls[pl]), 1),
+            "modeled_ops_per_sec": round(REPS * n / sum(modeled[pl]), 1),
+            "io_per_op": round(sum(cell_ios) / (REPS * n), 3),
+            "max_shard_io_frac": round(max(cell_ios) /
+                                       max(sum(cell_ios), 1), 3),
+            "shard_stall_frac": round(stall / max(wall + stall, 1e-12),
+                                      3),
+        }
+    rows[True]["speedup_vs_serial_modeled"] = round(float(np.median(
+        [s / p for s, p in zip(m_serial, m_piped)])), 2)
+    rows[True]["speedup_vs_serial_wall"] = round(float(np.median(
+        [s / p for s, p in zip(walls[False], walls[True])])), 2)
+    return rows[False], rows[True]
+
+
+def run() -> dict:
+    rows = []
+    for mix_name in MIX_KEYS:
+        for shards in SHARDS:
+            serial, piped = bench_cell(mix_name, shards)
+            rows += [serial, piped]
+            print(f"# {mix_name:12s} x{shards}: serial "
+                  f"{serial['modeled_ops_per_sec']:,.0f} modeled ops/s, "
+                  f"pipelined {piped['modeled_ops_per_sec']:,.0f} "
+                  f"({piped['speedup_vs_serial_modeled']}x modeled, "
+                  f"{piped['speedup_vs_serial_wall']}x wall), stall "
+                  f"{piped['shard_stall_frac']:.0%}", flush=True)
+    max_s = max(SHARDS)
+    target = [r for r in rows if r["shards"] == max_s
+              and r.get("speedup_vs_serial_modeled")]
+    geo = float(np.exp(np.mean(np.log(
+        [r["speedup_vs_serial_modeled"] for r in target])))) \
+        if target else None
+    result = {
+        "config": {
+            "preload_entries": PRELOAD,
+            "preload_range_deletes": N_RDEL,
+            "universe": UNIVERSE,
+            "batch": BATCH,
+            "rounds": ROUNDS,
+            "reps": REPS,
+            "scan_entries": SCAN_ENTRIES,
+            "rdel_len": RDEL_LEN,
+            "get_hit_frac": GET_HIT_FRAC,
+            "submit_depth": DEPTH,
+            "mixes": {k: MIXES[k] for k in MIX_KEYS},
+            "t_io_seconds": T_IO,
+            "strategy": "gloran",
+            "partition": "range",
+            "smoke": SMOKE,
+        },
+        "rows": rows,
+        "acceptance": {
+            # Headline: modeled mixed-batch throughput, pipelined vs
+            # serial, across the mixes at the max shard count (geomean;
+            # per-mix and wall numbers are all in ``rows``).
+            "geomean_pipeline_speedup_max_shards": round(geo, 2)
+            if geo else None,
+            "min_pipeline_speedup_max_shards": min(
+                (r["speedup_vs_serial_modeled"] for r in target),
+                default=None),
+            "max_pipeline_speedup_max_shards": max(
+                (r["speedup_vs_serial_modeled"] for r in target),
+                default=None),
+            "min_pipeline_speedup_max_shards_wall": min(
+                (r["speedup_vs_serial_wall"] for r in target),
+                default=None),
+        },
+    }
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {OUT}: geomean {max_s}-shard modeled pipeline "
+          f"speedup = "
+          f"{result['acceptance']['geomean_pipeline_speedup_max_shards']}"
+          f"x", flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    run()

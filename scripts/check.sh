@@ -30,3 +30,15 @@ assert s is not None and s >= 2.0, \
     f"batched range-scan speedup regressed: {s}x < 2x vs per-call loop"
 print(f"check OK: batched range scans {s}x vs per-call loop")
 EOF
+
+REPRO_MIXED_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_mixed_smoke.json \
+    python benchmarks/mixed_bench.py
+
+python - <<'EOF'
+import json
+d = json.load(open("/tmp/BENCH_mixed_smoke.json"))
+s = d["acceptance"]["geomean_pipeline_speedup_max_shards"]
+assert s is not None and s >= 1.5, \
+    f"pipelined mixed-batch speedup regressed: {s}x < 1.5x vs serial"
+print(f"check OK: pipelined mixed batches {s}x (modeled) vs serial")
+EOF

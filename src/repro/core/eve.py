@@ -124,13 +124,26 @@ class RAE:
 
     def insert_range(self, lo: int, hi: int, seq: int) -> None:
         """Mark the virtual-bit segment of deleted keys [lo, hi)."""
-        p_lo = int(self._pos(np.uint64(lo)))
-        p_hi = int(self._pos(np.uint64(max(lo, hi - 1))))
-        self.bloom.insert(np.arange(p_lo, p_hi + 1, dtype=np.uint64))
-        self.count += 1
-        self.max_seq = max(self.max_seq, int(seq))
-        self.min_seq = int(seq) if self.min_seq is None else min(
-            self.min_seq, int(seq))
+        self.insert_range_batch([lo], [hi], [seq])
+
+    def insert_range_batch(self, los, his, seqs) -> None:
+        """Batched ``insert_range``: one filter insert for the whole
+        batch (identical bits — inserts are idempotent ORs)."""
+        los = np.asarray(los, dtype=np.uint64)
+        his = np.asarray(his, dtype=np.uint64)
+        seqs = np.asarray(seqs, dtype=np.uint64)
+        if len(los) == 0:
+            return
+        p_lo = self._pos(los)
+        p_hi = self._pos(np.maximum(los, his - np.uint64(1)))
+        self.bloom.insert(np.concatenate(
+            [np.arange(int(a), int(b) + 1, dtype=np.uint64)
+             for a, b in zip(p_lo.tolist(), p_hi.tolist())]))
+        self.count += len(los)
+        self.max_seq = max(self.max_seq, int(seqs.max()))
+        lo_seq = int(seqs.min())
+        self.min_seq = lo_seq if self.min_seq is None else min(
+            self.min_seq, lo_seq)
 
     def might_cover(self, keys: np.ndarray) -> np.ndarray:
         return self.bloom.might_contain(self._pos(np.atleast_1d(keys)))
@@ -169,6 +182,25 @@ class EVE:
         if self.active.full:
             self.chain.append(self._new_rae(self.active.config.capacity * 2))
         self.active.insert_range(lo, hi, seq)
+
+    def insert_range_batch(self, los, his, seqs) -> None:
+        """Batched inserts with the same chaining points as sequential
+        ``insert_range`` calls: each chunk fills the active RAE to its
+        capacity, then the chain doubles."""
+        los = np.asarray(los, dtype=np.uint64)
+        his = np.asarray(his, dtype=np.uint64)
+        seqs = np.asarray(seqs, dtype=np.uint64)
+        i, n = 0, len(los)
+        while i < n:
+            if self.active.full:
+                self.chain.append(
+                    self._new_rae(self.active.config.capacity * 2))
+            take = min(n - i,
+                       self.active.config.capacity - self.active.count)
+            self.active.insert_range_batch(los[i:i + take],
+                                           his[i:i + take],
+                                           seqs[i:i + take])
+            i += take
 
     def maybe_deleted(self, key: int, entry_seq: int) -> bool:
         """False => the entry is PROVEN valid (skip the global index)."""

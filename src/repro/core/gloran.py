@@ -57,6 +57,25 @@ class GloranIndex:
             self.eve.insert_range(lo, hi, seq)
         self.num_range_deletes += 1
 
+    def range_delete_batch(self, los, his, seqs) -> None:
+        """Record a batch of range deletes (one engine plan step).
+
+        Index inserts stay sequential (buffer flushes must trigger at
+        the same points as per-call inserts), but the EVE estimator
+        absorbs the whole batch in chunked vectorized inserts — the
+        estimator bits, chain growth, and flush points are identical to
+        issuing the deletes one by one.
+        """
+        los = np.asarray(los, dtype=np.uint64)
+        his = np.asarray(his, dtype=np.uint64)
+        seqs = np.asarray(seqs, dtype=np.uint64)
+        assert (los < his).all(), "empty range"
+        for lo, hi, seq in zip(los.tolist(), his.tolist(), seqs.tolist()):
+            self.index.insert(lo, hi, smax=seq, smin=0)
+        if self.eve is not None:
+            self.eve.insert_range_batch(los, his, seqs)
+        self.num_range_deletes += len(los)
+
     # ------------------------------------------------------------- reads
     def is_deleted(self, key: int, entry_seq: int) -> bool:
         """Is the entry (key, entry_seq) invalidated by a range delete?

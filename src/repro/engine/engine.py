@@ -1,16 +1,23 @@
 """Sharded batched query engine fronting N LSM-tree shards.
 
-The serving tier's execution layer: a ``ShardRouter`` partitions batches
-of operations across hash- or range-partitioned ``LSMTree`` shards, each
-shard runs its ``ShardExecutor`` batched read path (Bloom + interval
-Pallas kernels, block cache), and results are merged back in request
-order.  ``num_shards=1`` degenerates to a single tree with the batched
-path — the drop-in replacement for calling the tree directly.
+The serving tier's execution layer, organized as **plan -> submit ->
+collect**: a ``Planner`` compiles a typed ``OpBatch`` into per-shard
+``ShardPlan``s (vectorized routing, range clipping, same-kind run
+grouping), ``Engine.submit`` launches those plans — concurrently across
+shards when pipelining is on, serially in shard order when off — and the
+returned ``PendingBatch`` merges results back in request order.  The
+classic conveniences (``get_batch``, ``range_scan_batch``, ``execute``,
+...) are thin wrappers that build an ``OpBatch`` and block on ``submit``.
+``num_shards=1`` degenerates to a single tree with the batched path —
+the drop-in replacement for calling the tree directly.
 """
 
 from __future__ import annotations
 
+import os
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -18,6 +25,8 @@ from ..core.gloran import GloranConfig
 from ..lsm import LSMConfig, LSMTree
 from ..lsm.merge import merge_runs
 from .executor import EngineConfig, ShardExecutor
+from .pending import PendingBatch
+from .plan import OpBatch, Planner
 from .router import ShardRouter
 from .stats import EngineStats, KernelCounters, merge_io_snapshots
 
@@ -29,12 +38,23 @@ class Engine:
 
     Public surface (all batch results come back in request order):
 
-      put_batch / delete_batch / get_batch    vectorized point ops
-      put / delete / get                      scalar conveniences
-      range_scan_batch / range_scan           sorted live entries per range
-      range_delete_batch / range_delete       strategy-dispatched deletes
-      execute(ops)                            one mixed op stream
-      stats() / cache_snapshot()              per-op-class rollups
+      submit(OpBatch) -> PendingBatch          plan + launch, collect later
+      put_batch / delete_batch / get_batch     vectorized point ops
+      put / delete / get                       scalar conveniences
+      range_scan_batch / range_scan            sorted live entries per range
+      range_delete_batch / range_delete        strategy-dispatched deletes
+      execute(ops)                             one mixed tuple op stream
+      drain()                                  join all in-flight batches
+      stats() / cache_snapshot()               per-op-class rollups
+
+    Pipelining: with ``EngineConfig.pipeline`` on (the default; env
+    ``REPRO_ENGINE_PIPELINE=0`` forces it off) and more than one shard,
+    each shard executes its plan on a dedicated single-worker pool —
+    shards run concurrently, every shard sees its batches in submit
+    order, and ``submit`` returns before execution finishes so the
+    caller can plan batch n+1 while batch n executes.  ``pipeline=False``
+    runs the identical plans inline in shard order; results are
+    byte-identical either way.
 
     Range ops route like point ops: range-partitioned shards serve only
     the overlapping slabs (clipped), hash-partitioned shards fan out and
@@ -52,33 +72,99 @@ class Engine:
         self.router = ShardRouter(self.num_shards,
                                   partition=self.config.partition,
                                   universe=base.key_universe)
+        self.planner = Planner(self.router)
         self.shards = []
         for _ in range(self.num_shards):
             tree = LSMTree(base, strategy=strategy,
                            gloran_config=gloran_config)
             self.shards.append(ShardExecutor(tree, self.config))
         self.stats_ = EngineStats()
+        pl = self.config.pipeline
+        if pl is None:
+            pl = os.environ.get("REPRO_ENGINE_PIPELINE", "1") != "0"
+        self.pipeline_default = bool(pl)
+        self._pools: list[ThreadPoolExecutor] | None = None
+        self._inflight: list[PendingBatch] = []
+        self._inflight_lock = threading.Lock()
+
+    # -------------------------------------------------- submit / collect
+    def submit(self, batch: OpBatch, *,
+               pipeline: bool | None = None) -> PendingBatch:
+        """Plan and launch a typed op batch; collect via the handle.
+
+        ``pipeline=None`` uses the engine default.  Pipelined submits
+        return immediately (execution proceeds on the shard pools);
+        serial submits execute inline before returning, after draining
+        any in-flight pipelined work so the per-shard op order stays the
+        submit order.
+        """
+        if pipeline is None:
+            pipeline = self.pipeline_default
+        pipeline = bool(pipeline) and self.num_shards > 1
+        plan = self.planner.plan(batch)
+        if not pipeline:
+            # Serialize with in-flight pipelined work, execute inline,
+            # and collect immediately so a dropped handle still lands
+            # in stats (wait() is idempotent for later accessors).
+            self.drain()
+            pending = PendingBatch(self, plan, pipeline=False)
+            pending._start()
+            return pending.wait()
+        pending = PendingBatch(self, plan, pipeline=True)
+        # Launch before publishing: a concurrent drain()/stats() must
+        # never collect a handle whose shard plans haven't started.
+        pending._start()
+        with self._inflight_lock:
+            self._inflight.append(pending)
+        return pending
+
+    def drain(self) -> None:
+        """Block until every in-flight submitted batch has collected."""
+        while True:
+            with self._inflight_lock:
+                if not self._inflight:
+                    return
+                pending = self._inflight[0]
+            pending.wait()
+
+    def _shard_pools(self) -> list[ThreadPoolExecutor]:
+        """One single-worker pool per shard: cross-shard parallelism with
+        per-shard FIFO (a later batch never overtakes an earlier one on
+        the same shard — all ordering correctness needs)."""
+        if self._pools is None:
+            self._pools = [
+                ThreadPoolExecutor(max_workers=1,
+                                   thread_name_prefix=f"shard-{s}")
+                for s in range(self.num_shards)]
+        return self._pools
+
+    def _finish_batch(self, pending: PendingBatch) -> None:
+        """Merge-back bookkeeping: roll one collected batch into stats.
+
+        With overlapping in-flight batches the engine-wide I/O delta is
+        attributed to whichever batch collects it first — per-op-class
+        I/O stays exact for the blocking wrappers and approximate under
+        concurrent ``submit`` streams.
+        """
+        batch = pending.plan.batch
+        reads, writes = self._io_marks()
+        self.stats_.record(
+            batch.kind_name, len(batch),
+            time.perf_counter() - pending._t0,
+            io_reads=reads - pending._io0[0],
+            io_writes=writes - pending._io0[1])
+        self.stats_.record_shards(pending._walls, pending.pipeline)
+        with self._inflight_lock:
+            if pending in self._inflight:
+                self._inflight.remove(pending)
 
     def _io_marks(self) -> tuple[int, int]:
         return self.io_reads, self.io_writes
 
-    def _record(self, op: str, n: int, t0: float,
-                marks: tuple[int, int]) -> None:
-        """Roll wall time + the I/O charged since ``marks`` into stats."""
-        self.stats_.record(op, n, time.perf_counter() - t0,
-                           io_reads=self.io_reads - marks[0],
-                           io_writes=self.io_writes - marks[1])
-
     # ------------------------------------------------------------ writes
     def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
         """Insert a batch of (key, val) pairs (split across shards)."""
-        keys = np.asarray(keys, dtype=np.uint64)
-        vals = np.asarray(vals, dtype=np.uint64)
-        t0, io0 = time.perf_counter(), self._io_marks()
-        for s, idx in enumerate(self.router.split(keys)):
-            if len(idx):
-                self.shards[s].put_batch(keys[idx], vals[idx])
-        self._record("put", len(keys), t0, io0)
+        self.submit(OpBatch.puts(keys, vals)).wait()
 
     def put(self, key: int, val: int) -> None:
         """Scalar insert (a one-element ``put_batch``)."""
@@ -87,12 +173,7 @@ class Engine:
 
     def delete_batch(self, keys: np.ndarray) -> None:
         """Point-delete a batch of keys (split across shards)."""
-        keys = np.asarray(keys, dtype=np.uint64)
-        t0, io0 = time.perf_counter(), self._io_marks()
-        for s, idx in enumerate(self.router.split(keys)):
-            if len(idx):
-                self.shards[s].delete_batch(keys[idx])
-        self._record("delete", len(keys), t0, io0)
+        self.submit(OpBatch.deletes(keys)).wait()
 
     def delete(self, key: int) -> None:
         """Scalar point delete (a one-element ``delete_batch``)."""
@@ -110,15 +191,11 @@ class Engine:
         shard applies its visits in request order, so a later op in the
         batch shadows an earlier one exactly as sequential calls would.
         """
-        t0, io0 = time.perf_counter(), self._io_marks()
-        for s, visits in enumerate(self.router.split_ranges(ranges)):
-            if visits:
-                self.shards[s].range_delete_batch(
-                    [(lo, hi) for _, lo, hi in visits])
-        self._record("range_delete", len(ranges), t0, io0)
+        self.submit(OpBatch.range_deletes(ranges)).wait()
 
     def flush(self) -> None:
-        """Flush every shard's memtable to its level 0."""
+        """Flush every shard's memtable to its level 0 (drains first)."""
+        self.drain()
         for sh in self.shards:
             sh.flush()
 
@@ -126,18 +203,7 @@ class Engine:
     def get_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Vectorized point lookups; (found mask, values) in request
         order, merged back from the per-shard batched read paths."""
-        keys = np.asarray(keys, dtype=np.uint64)
-        t0, io0 = time.perf_counter(), self._io_marks()
-        found = np.zeros(len(keys), dtype=bool)
-        vals = np.zeros(len(keys), dtype=np.uint64)
-        for s, idx in enumerate(self.router.split(keys)):
-            if len(idx) == 0:
-                continue
-            f, v = self.shards[s].get_batch(keys[idx])
-            found[idx] = f
-            vals[idx] = v
-        self._record("get", len(keys), t0, io0)
-        return found, vals
+        return self.submit(OpBatch.gets(keys)).get_results()
 
     def get(self, key: int):
         """Scalar point lookup; the value or None."""
@@ -160,18 +226,7 @@ class Engine:
         globally sorted); hash-partitioned shards return disjoint sorted
         sets that are merged as sorted views.
         """
-        t0, io0 = time.perf_counter(), self._io_marks()
-        parts: list[list] = [[] for _ in ranges]
-        for s, visits in enumerate(self.router.split_ranges(ranges)):
-            if not visits:
-                continue
-            res = self.shards[s].range_scan_batch(
-                [(lo, hi) for _, lo, hi in visits])
-            for (rid, _, _), kv in zip(visits, res):
-                parts[rid].append(kv)
-        out = [self._merge_scan_parts(ps) for ps in parts]
-        self._record("range_scan", len(ranges), t0, io0)
-        return out
+        return self.submit(OpBatch.range_scans(ranges)).scan_results()
 
     def _merge_scan_parts(self, parts: list) -> tuple[np.ndarray,
                                                       np.ndarray]:
@@ -194,7 +249,8 @@ class Engine:
 
     # --------------------------------------------------------- mixed ops
     def execute(self, ops: list[tuple]) -> list:
-        """Execute a mixed op batch; results align with request order.
+        """Execute a mixed tuple op stream; results align with request
+        order (the legacy surface — ``OpBatch.from_ops`` + ``submit``).
 
         ``ops`` entries: ``("put", key, val)``, ``("delete", key)``,
         ``("get", key)``, ``("range_delete", lo, hi)``,
@@ -206,56 +262,7 @@ class Engine:
         preserved.  Range ops visit every owning shard; a scan's
         per-shard parts are merged back into one sorted view.
         """
-        results: list = [None] * len(ops)
-        scan_parts: dict[int, list] = {}
-        per_shard: list[list[tuple]] = [[] for _ in range(self.num_shards)]
-        for i, op in enumerate(ops):
-            kind = op[0]
-            if kind in ("put", "delete", "get"):
-                per_shard[self.router.shard_of_scalar(op[1])].append(
-                    (i, op))
-            elif kind in ("range_delete", "range_scan"):
-                if kind == "range_scan":
-                    scan_parts[i] = []
-                for s, lo, hi in self.router.shards_for_range(op[1], op[2]):
-                    per_shard[s].append((i, (kind, lo, hi)))
-            else:
-                raise ValueError(f"unknown op kind: {kind!r}")
-        t0, io0 = time.perf_counter(), self._io_marks()
-        for s, stream in enumerate(per_shard):
-            sh = self.shards[s]
-            j = 0
-            while j < len(stream):
-                kind = stream[j][1][0]
-                k = j
-                while k < len(stream) and stream[k][1][0] == kind:
-                    k += 1
-                group = stream[j:k]
-                if kind == "put":
-                    sh.put_batch(
-                        np.asarray([g[1][1] for g in group], np.uint64),
-                        np.asarray([g[1][2] for g in group], np.uint64))
-                elif kind == "delete":
-                    sh.delete_batch(
-                        np.asarray([g[1][1] for g in group], np.uint64))
-                elif kind == "get":
-                    f, v = sh.get_batch(
-                        np.asarray([g[1][1] for g in group], np.uint64))
-                    for (i, _), fi, vi in zip(group, f.tolist(), v.tolist()):
-                        results[i] = vi if fi else None
-                elif kind == "range_scan":
-                    res = sh.range_scan_batch(
-                        [(lo, hi) for _, (_, lo, hi) in group])
-                    for (i, _), kv in zip(group, res):
-                        scan_parts[i].append(kv)
-                else:  # range_delete (already clipped per shard)
-                    sh.range_delete_batch(
-                        [(lo, hi) for _, (_, lo, hi) in group])
-                j = k
-        for i, ps in scan_parts.items():
-            results[i] = self._merge_scan_parts(ps)
-        self._record("mixed", len(ops), t0, io0)
-        return results
+        return self.submit(OpBatch.from_ops(ops)).results()
 
     # -------------------------------------------------------------- misc
     @property
@@ -287,9 +294,11 @@ class Engine:
                 "per_shard": snaps}
 
     def stats(self) -> dict:
+        self.drain()
         return {
             "num_shards": self.num_shards,
             "partition": self.router.partition,
+            "pipeline": self.pipeline_default,
             "entries": self.num_entries,
             "engine": self.stats_.snapshot(),
             "io": merge_io_snapshots(

@@ -25,6 +25,7 @@ skipping charges for resident blocks.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -34,6 +35,7 @@ from ..kernels.bloom.ops import bloom_probe
 from ..kernels.interval.ops import interval_query
 from ..lsm.tree import LSMTree
 from .cache import BlockCache
+from .plan import OP_DELETE, OP_GET, OP_PUT, OP_RANGE_SCAN, ShardPlan
 from .stats import KernelCounters
 
 _U32_LIMIT = 0xFFFFFFFF  # strict upper bound for kernel-eligible values
@@ -45,6 +47,7 @@ class EngineConfig:
     """Knobs of the batched execution layer (not the LSM itself)."""
 
     partition: str = "hash"  # "hash" | "range" key partitioning
+    pipeline: bool | None = None  # concurrent shard plans; None = env
     cache_blocks: int = 0  # per-shard block cache capacity; 0 = off
     use_bloom_kernel: bool = True
     use_interval_kernel: bool = True
@@ -82,13 +85,45 @@ class ShardExecutor:
         self.tree.range_delete(lo, hi)
 
     def range_delete_batch(self, ranges) -> None:
-        """Apply a batch of [lo, hi) range deletes in request order."""
-        for lo, hi in ranges:
-            self.tree.range_delete(lo, hi)
+        """Apply a batch of [lo, hi) range deletes in request order
+        (GLORAN absorbs the batch in one index/estimator call)."""
+        self.tree.range_delete_batch(ranges)
 
     def flush(self) -> None:
         """Flush the shard's memtable (and LRR buffer) to level 0."""
         self.tree.flush()
+
+    # ------------------------------------------------------- typed plans
+    def run_plan(self, sp: ShardPlan) -> tuple[list, float]:
+        """Execute one compiled ``ShardPlan`` in request order.
+
+        Each ``PlanStep`` is one vectorized sub-batch on this shard's
+        batched paths.  Returns ``(payloads, wall_seconds)`` where
+        payloads carry the result-bearing steps — ``(OP_GET, idx, found,
+        vals)`` and ``(OP_RANGE_SCAN, idx, [(keys, vals), ...])`` — for
+        the engine's deterministic merge-back; ``wall_seconds`` is this
+        shard's busy time (the pipeline's per-shard wall/stall metric).
+        Thread-safe across shards: every touched structure (tree, cache,
+        counters, I/O ledger) is shard-local.
+        """
+        t0 = time.perf_counter()
+        payloads: list = []
+        for step in sp.steps:
+            if step.kind == OP_PUT:
+                self.put_batch(step.keys, step.vals)
+            elif step.kind == OP_DELETE:
+                self.delete_batch(step.keys)
+            elif step.kind == OP_GET:
+                found, vals = self.get_batch(step.keys)
+                payloads.append((OP_GET, step.idx, found, vals))
+            elif step.kind == OP_RANGE_SCAN:
+                res = self.range_scan_batch(
+                    list(zip(step.los.tolist(), step.his.tolist())))
+                payloads.append((OP_RANGE_SCAN, step.idx, res))
+            else:  # OP_RANGE_DELETE (bounds already clipped per shard)
+                self.range_delete_batch(
+                    list(zip(step.los.tolist(), step.his.tolist())))
+        return payloads, time.perf_counter() - t0
 
     # ------------------------------------------------------------ reads
     def _validity_fn(self):
@@ -115,10 +150,12 @@ class ShardExecutor:
 
     def range_scan_batch(self, ranges) -> list:
         """Batched range scans through the tree's one-pass batch path,
-        with GLORAN validity filtering on the kernel hook; one (keys,
-        vals) pair per requested [lo, hi), in request order."""
-        return self.tree.range_scan_batch(ranges,
-                                          validity_fn=self._validity_fn())
+        with GLORAN validity filtering on the kernel hook and slice
+        charges absorbed by the shard's block cache; one (keys, vals)
+        pair per requested [lo, hi), in request order."""
+        return self.tree.range_scan_batch(
+            ranges, validity_fn=self._validity_fn(),
+            cache=self.cache if self.cache.enabled else None)
 
     # --------------------------------------------------- filter kernels
     def _bloom_maybe(self, lvl, keys: np.ndarray) -> np.ndarray:

@@ -77,27 +77,62 @@ class ShardRouter:
                 for s in range(self.num_shards)]
 
     # ------------------------------------------------------------ ranges
+    def clip_ranges(self, los, his) -> tuple[np.ndarray, np.ndarray,
+                                             np.ndarray, np.ndarray]:
+        """Vectorized shard visits for a batch of [lo, hi) range ops.
+
+        Returns ``(rids, shards, clos, chis)`` parallel arrays, one row
+        per (range, shard) visit, ordered by rid then shard: range op
+        ``rids[i]`` must visit ``shards[i]`` with the clipped sub-range
+        [``clos[i]``, ``chis[i]``).  Under hash partitioning every range
+        broadcasts unclipped (its keys are scattered); under range
+        partitioning each range visits only the slabs it overlaps, and
+        the last slab is unbounded above (``shard_of`` clamps every key
+        >= universe into it, so range ops must reach them too).
+        """
+        los = np.asarray(los, dtype=np.uint64)
+        his = np.asarray(his, dtype=np.uint64)
+        nr = len(los)
+        assert len(his) == nr
+        if nr and not (los < his).all():
+            bad = int(np.flatnonzero(los >= his)[0])
+            raise ValueError(f"empty range [{los[bad]}, {his[bad]})")
+        ns = self.num_shards
+        empty = (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                 np.zeros(0, np.uint64), np.zeros(0, np.uint64))
+        if nr == 0:
+            return empty
+        if self.partition == "hash" or ns == 1:
+            return (np.repeat(np.arange(nr, dtype=np.int64), ns),
+                    np.tile(np.arange(ns, dtype=np.int64), nr),
+                    np.repeat(los, ns), np.repeat(his, ns))
+        w = np.uint64(self._width)
+        first = np.minimum(los // w, np.uint64(ns - 1)).astype(np.int64)
+        last = np.minimum((his - np.uint64(1)) // w,
+                          np.uint64(ns - 1)).astype(np.int64)
+        counts = last - first + 1
+        total = int(counts.sum())
+        rids = np.repeat(np.arange(nr, dtype=np.int64), counts)
+        offs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        shards = first[rids] + (np.arange(total, dtype=np.int64)
+                                - np.repeat(offs, counts))
+        slab_lo = shards.astype(np.uint64) * w
+        slab_hi = np.where(shards < ns - 1,
+                           (shards.astype(np.uint64) + np.uint64(1)) * w,
+                           his[rids])
+        clos = np.maximum(los[rids], slab_lo)
+        chis = np.minimum(his[rids], slab_hi)
+        keep = clos < chis
+        if keep.all():
+            return rids, shards, clos, chis
+        return rids[keep], shards[keep], clos[keep], chis[keep]
+
     def shards_for_range(self, lo: int, hi: int) -> list[tuple[int, int,
                                                                int]]:
         """(shard, lo', hi') per shard a range op must visit."""
-        lo, hi = int(lo), int(hi)
-        assert lo < hi
-        if self.partition == "hash":
-            # Keys of the range are scattered: broadcast, unclipped.
-            return [(s, lo, hi) for s in range(self.num_shards)]
-        first = min(lo // self._width, self.num_shards - 1)
-        last = min((hi - 1) // self._width, self.num_shards - 1)
-        out = []
-        for s in range(first, last + 1):
-            slab_lo = s * self._width
-            # The last slab is unbounded above: shard_of clamps every
-            # key >= universe into it, so range ops must reach them too.
-            slab_hi = (s + 1) * self._width \
-                if s < self.num_shards - 1 else hi
-            c_lo, c_hi = max(lo, slab_lo), min(hi, slab_hi)
-            if c_lo < c_hi:
-                out.append((s, c_lo, c_hi))
-        return out
+        _, shards, clos, chis = self.clip_ranges([lo], [hi])
+        return [(int(s), int(a), int(b))
+                for s, a, b in zip(shards, clos, chis)]
 
     def split_ranges(self, ranges) -> list[list[tuple[int, int, int]]]:
         """Per-shard worklists for a batch of range ops.
@@ -111,9 +146,12 @@ class ShardRouter:
         overlapping slabs; hash partitioning broadcasts (see
         ``shards_for_range``).
         """
+        ranges = list(ranges)
         out: list[list[tuple[int, int, int]]] = [
             [] for _ in range(self.num_shards)]
-        for rid, (lo, hi) in enumerate(ranges):
-            for s, c_lo, c_hi in self.shards_for_range(lo, hi):
-                out[s].append((rid, c_lo, c_hi))
+        rids, shards, clos, chis = self.clip_ranges(
+            [r[0] for r in ranges], [r[1] for r in ranges])
+        for rid, s, lo, hi in zip(rids.tolist(), shards.tolist(),
+                                  clos.tolist(), chis.tolist()):
+            out[s].append((rid, lo, hi))
         return out

@@ -45,6 +45,10 @@ class EngineStats:
     batches: dict = field(default_factory=dict)    # op -> batch count
     io_reads: dict = field(default_factory=dict)   # op -> blocks read
     io_writes: dict = field(default_factory=dict)  # op -> blocks written
+    shard_wall: dict = field(default_factory=dict)   # shard -> busy s
+    shard_stall: dict = field(default_factory=dict)  # shard -> idle s
+    pipelined_batches: int = 0
+    serial_batches: int = 0
 
     def record(self, op: str, n: int, seconds: float,
                io_reads: int = 0, io_writes: int = 0) -> None:
@@ -53,6 +57,27 @@ class EngineStats:
         self.batches[op] = self.batches.get(op, 0) + 1
         self.io_reads[op] = self.io_reads.get(op, 0) + int(io_reads)
         self.io_writes[op] = self.io_writes.get(op, 0) + int(io_writes)
+
+    def record_shards(self, walls: dict, pipelined: bool) -> None:
+        """Per-shard busy/stall seconds for one submitted batch.
+
+        ``walls`` maps shard id -> that shard's plan execution time.  A
+        batch's critical path is its slowest shard; every other shard
+        *stalls* for the difference (idle while the merge-back waits).
+        Observable pipeline health: a balanced fleet has stall ~ 0, a
+        skewed one shows where the wall time actually went.
+        """
+        if pipelined:
+            self.pipelined_batches += 1
+        else:
+            self.serial_batches += 1
+        if not walls:
+            return
+        crit = max(walls.values())
+        for s, w in walls.items():
+            self.shard_wall[s] = self.shard_wall.get(s, 0.0) + float(w)
+            self.shard_stall[s] = self.shard_stall.get(s, 0.0) + \
+                float(crit - w)
 
     def ops_per_sec(self, op: str) -> float:
         return self.ops.get(op, 0) / max(self.wall.get(op, 0.0), 1e-12)
@@ -73,9 +98,18 @@ class EngineStats:
         ``ops`` logical ops executed; ``batches`` engine-level calls;
         ``wall_seconds`` total wall time; ``ops_per_sec`` / ``us_per_op``
         derived throughput/latency; ``io_reads`` / ``io_writes`` blocks
-        charged while serving that class; ``io_per_op`` blocks per op.
+        charged while serving that class; ``io_per_op`` blocks per op;
+        ``shard_wall_seconds`` / ``shard_stall_seconds`` per-shard
+        busy/idle time across submitted batches; ``pipelined_batches`` /
+        ``serial_batches`` how each batch executed.
         """
         return {
+            "pipelined_batches": self.pipelined_batches,
+            "serial_batches": self.serial_batches,
+            "shard_wall_seconds": {s: round(v, 6)
+                                   for s, v in self.shard_wall.items()},
+            "shard_stall_seconds": {s: round(v, 6)
+                                    for s, v in self.shard_stall.items()},
             "ops": dict(self.ops),
             "wall_seconds": {k: round(v, 6) for k, v in self.wall.items()},
             "batches": dict(self.batches),

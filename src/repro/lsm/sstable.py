@@ -14,6 +14,8 @@ import math
 
 import numpy as np
 
+from ..core.areas import AreaSet
+from ..core.disjointize import disjointize
 from ..core.eve import BloomBits
 from ..core.iostats import IOStats
 from .format import LSMConfig, PUT, TOMBSTONE
@@ -118,18 +120,36 @@ class SSTable:
         return (self.keys[sl], self.seqs[sl], self.types[sl], self.vals[sl])
 
     def range_slice_many(self, los: np.ndarray, his: np.ndarray,
-                         io: IOStats | None = None) -> list[tuple]:
+                         io: IOStats | None = None, *,
+                         cache=None) -> list[tuple]:
         """One ``range_slice`` per [lo, hi) pair, with the slice bounds
         and the sequential-read charges computed vectorized across the
-        whole batch (charges are identical to per-call ``range_slice``)."""
+        whole batch (charges are identical to per-call ``range_slice``).
+
+        ``cache`` is an optional read-through block cache: instead of the
+        flat sequential-read formula, each scan charges exactly the data
+        blocks its slice touches that the cache does not already hold —
+        so repeated scans of hot slabs stop paying I/O, same as point
+        lookups (scan-resident blocks are admitted read-through)."""
         lo_i = np.searchsorted(self.keys, np.asarray(los, np.uint64))
         hi_i = np.searchsorted(self.keys, np.asarray(his, np.uint64))
         cnts = hi_i - lo_i
         if io is not None and cnts.any():
-            nz = cnts[cnts > 0]
-            io.read_blocks(
-                int((1 + (nz * self.config.entry_size) //
-                     self.config.block_size).sum()), tag="range_scan")
+            if cache is not None:
+                epb = self.config.entries_per_block
+                misses = 0
+                for a, b in zip(lo_i.tolist(), hi_i.tolist()):
+                    if b <= a:
+                        continue
+                    blocks = np.arange(a // epb, (b - 1) // epb + 1)
+                    hits = cache.probe_many(self.uid, blocks)
+                    misses += int((~hits).sum())
+                io.read_blocks(misses, tag="range_scan")
+            else:
+                nz = cnts[cnts > 0]
+                io.read_blocks(
+                    int((1 + (nz * self.config.entry_size) //
+                         self.config.block_size).sum()), tag="range_scan")
         return [(self.keys[a:b], self.seqs[a:b], self.types[a:b],
                  self.vals[a:b]) for a, b in zip(lo_i.tolist(),
                                                  hi_i.tolist())]
@@ -150,6 +170,7 @@ class RangeTombstoneBlock:
         self.ends = np.asarray(ends, dtype=np.uint64)[order]
         self.seqs = np.asarray(seqs, dtype=np.uint64)[order]
         self.config = config
+        self._stab: tuple | None = None  # lazy disjoint step function
 
     @staticmethod
     def empty(config: LSMConfig) -> "RangeTombstoneBlock":
@@ -163,44 +184,55 @@ class RangeTombstoneBlock:
     def nbytes(self) -> int:
         return len(self.starts) * self.config.range_tombstone_size
 
+    def _step_fn(self) -> tuple:
+        """Disjoint max-seq step function over the tombstones (lazy).
+
+        Reuses the paper's disjointization (§4.2, ``core.disjointize``):
+        tombstone (start, end, seq) is the effective area [start, end) x
+        [0, seq), and disjointizing the set yields key-disjoint segments
+        whose ``smax`` is exactly the max covering seq — so each probe is
+        one ``searchsorted`` over segment starts instead of an
+        O(keys x tombstones) cover mask.  Blocks are immutable (merges
+        build new ones), so the function is computed once per block.
+        """
+        if self._stab is None:
+            s = disjointize(AreaSet(self.starts, self.ends,
+                                    np.zeros(len(self.starts), np.uint64),
+                                    self.seqs))
+            self._stab = (s.lo, s.hi, s.smax)
+        return self._stab
+
     def probe(self, key: int, io: IOStats | None = None) -> int:
         """Max tombstone seq covering ``key`` (0 if none). Charges the
         paper's probe cost."""
         if len(self.starts) == 0:
             return 0
-        key = np.uint64(key)
-        cnt = int(np.searchsorted(self.starts, key, side="right"))
-        if io is not None:
-            io.read_blocks(
-                1 + (cnt * self.config.range_tombstone_size) //
-                self.config.block_size, tag="rt_block")
-        if cnt == 0:
-            return 0
-        cover = self.ends[:cnt] > key
-        return int(self.seqs[:cnt][cover].max()) if cover.any() else 0
+        return int(self.probe_batch(np.asarray([key], np.uint64),
+                                    io=io)[0])
 
     def probe_batch(self, keys: np.ndarray,
                     io: IOStats | None = None) -> np.ndarray:
-        """Vectorized probe: max covering seq per key."""
+        """Vectorized probe: max covering seq per key.
+
+        I/O charges are the per-key retrieval cost of Eq. (1) — every
+        tombstone with start <= key streams in — while the verdict comes
+        from the disjoint step function (O(log tombstones) per key).
+        """
         keys = np.asarray(keys, dtype=np.uint64)
-        out = np.zeros(len(keys), dtype=np.uint64)
         if len(self.starts) == 0:
             if io is not None and len(keys):
                 io.read_blocks(len(keys), tag="rt_block")
-            return out
-        cnts = np.searchsorted(self.starts, keys, side="right")
+            return np.zeros(len(keys), dtype=np.uint64)
         if io is not None:
+            cnts = np.searchsorted(self.starts, keys, side="right")
             ios = 1 + (cnts * self.config.range_tombstone_size) // \
                 self.config.block_size
             io.read_blocks(int(ios.sum()), tag="rt_block")
-        # O(n_keys * n_ts) max-over-prefix with cover mask; fine for the
-        # simulator (numpy-vectorized), the I/O count above is the metric.
-        cover = (self.starts[None, :] <= keys[:, None]) & \
-            (self.ends[None, :] > keys[:, None])
-        seqs = np.where(cover, self.seqs[None, :], 0)
-        if seqs.size:
-            out = seqs.max(axis=1).astype(np.uint64)
-        return out
+        lo, hi, smax = self._step_fn()
+        i = np.searchsorted(lo, keys, side="right").astype(np.int64) - 1
+        ic = np.maximum(i, 0)
+        cov = (i >= 0) & (keys < hi[ic])
+        return np.where(cov, smax[ic], np.uint64(0)).astype(np.uint64)
 
     def merge(self, other: "RangeTombstoneBlock") -> "RangeTombstoneBlock":
         return RangeTombstoneBlock(

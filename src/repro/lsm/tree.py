@@ -109,6 +109,27 @@ class LSMTree:
         else:  # gloran
             self.gloran.range_delete(lo, hi, self._next_seq())
 
+    def range_delete_batch(self, ranges) -> None:
+        """Apply a batch of [lo, hi) range deletes in request order.
+
+        Under GLORAN the whole batch goes to the global index in one
+        call (sequence numbers assigned in order, estimator inserts
+        vectorized — state is identical to per-call deletes); the other
+        strategies apply their per-range write paths sequentially.
+        """
+        ranges = list(ranges)
+        if not ranges:
+            return
+        if self.strategy == "gloran":
+            los = np.asarray([r[0] for r in ranges], dtype=np.uint64)
+            his = np.asarray([r[1] for r in ranges], dtype=np.uint64)
+            assert (los < his).all()
+            self.gloran.range_delete_batch(los, his,
+                                           self._next_seqs(len(ranges)))
+        else:
+            for lo, hi in ranges:
+                self.range_delete(lo, hi)
+
     # -------------------------------------------------------------- reads
     def _mem_rt_cover(self, key: int) -> int:
         cov = 0
@@ -168,14 +189,17 @@ class LSMTree:
                 m = (keys >= lo) & (keys < hi)
                 rt_max[m] = np.maximum(rt_max[m], np.uint64(s))
 
-        # Memtable.
-        for j, k in enumerate(keys.tolist()):
-            hit = self.mem.get(k)
-            if hit is not None:
-                resolved[j] = True
-                out_found[j] = hit[1] == 0
-                out_seqs[j] = hit[0]
-                out_vals[j] = hit[2]
+        # Memtable (skipped entirely when empty — the steady post-flush
+        # state of read-mostly serving, where this per-key loop would
+        # otherwise dominate the batched read path).
+        if self.mem:
+            for j, k in enumerate(keys.tolist()):
+                hit = self.mem.get(k)
+                if hit is not None:
+                    resolved[j] = True
+                    out_found[j] = hit[1] == 0
+                    out_seqs[j] = hit[0]
+                    out_vals[j] = hit[2]
 
         for i, lvl in enumerate(self.levels):
             todo = ~resolved
@@ -222,12 +246,13 @@ class LSMTree:
         return (keys[order], rows[order, 0],
                 rows[order, 1].astype(np.uint8), rows[order, 2])
 
-    def range_scan(self, lo: int, hi: int, *, validity_fn=None):
+    def range_scan(self, lo: int, hi: int, *, validity_fn=None,
+                   cache=None):
         """All live entries with lo <= key < hi. Returns (keys, vals)."""
-        return self.range_scan_batch([(lo, hi)],
-                                     validity_fn=validity_fn)[0]
+        return self.range_scan_batch([(lo, hi)], validity_fn=validity_fn,
+                                     cache=cache)[0]
 
-    def range_scan_batch(self, ranges, *, validity_fn=None):
+    def range_scan_batch(self, ranges, *, validity_fn=None, cache=None):
         """Execute many range scans in one pass over the tree.
 
         Each [lo, hi) produces the same (keys, vals) pair a per-call
@@ -239,7 +264,10 @@ class LSMTree:
         filtering runs once over the concatenated candidates of every
         range.  ``validity_fn(keys, seqs) -> dead mask`` optionally
         replaces the GLORAN probe (``repro.engine`` supplies the Pallas
-        interval-kernel path), exactly like ``get_batch``.
+        interval-kernel path), exactly like ``get_batch``; ``cache``
+        optionally absorbs the data-block charges of each level's slices
+        (scan-resident blocks stop paying I/O, see
+        ``SSTable.range_slice_many``).
         """
         ranges = [(int(lo), int(hi)) for lo, hi in ranges]
         nr = len(ranges)
@@ -250,7 +278,7 @@ class LSMTree:
         mem = self._mem_sorted()
         m_lo = np.searchsorted(mem[0], los)
         m_hi = np.searchsorted(mem[0], his)
-        per_level = [lvl.range_slice_many(los, his, self.io)
+        per_level = [lvl.range_slice_many(los, his, self.io, cache=cache)
                      for lvl in self.levels
                      if lvl is not None and len(lvl)]
         merged = []

@@ -10,8 +10,10 @@ registry's point lookups (one per scheduled token batch per session) stay
 fast regardless of expiry churn.
 
 Keys: (session_id << 16 | page_idx).  ``expire_session`` / ``expire_range``
-are single range deletes; the decode scheduler's page lookups go through
-``tree.get_batch``.
+are single range deletes; the decode scheduler's page lookups are typed
+``OpBatch`` gets submitted through the engine — ``lookup_submit`` returns
+the ``PendingBatch`` so a decode step can run while the registry shards
+execute (plan/submit/collect pipelining).
 """
 
 from __future__ import annotations
@@ -24,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.gloran import GloranConfig
-from ..engine import Engine, EngineConfig
+from ..engine import Engine, EngineConfig, OpBatch, PendingBatch
 from ..lsm import LSMConfig
 from ..models import Transformer, tree_init
 
@@ -36,6 +38,7 @@ class ServeStats:
     tokens_generated: int = 0
     registry_lookups: int = 0
     registry_io_reads: int = 0
+    registry_stall_seconds: float = 0.0  # blocked on in-flight lookups
     expired_sessions: int = 0
     wall_seconds: float = 0.0
 
@@ -86,6 +89,16 @@ class SessionRegistry:
         keys = (np.asarray(session_ids, np.uint64) << np.uint64(PAGE_BITS)) \
             | np.asarray(pages, dtype=np.uint64)
         return self.engine.get_batch(keys)
+
+    def lookup_submit(self, session_ids: np.ndarray,
+                      pages: np.ndarray) -> PendingBatch:
+        """Non-blocking ``lookup``: submit the page-lookup batch and
+        return its ``PendingBatch`` so the caller can overlap other work
+        (the decode step) with registry execution; collect with
+        ``.get_results()``."""
+        keys = (np.asarray(session_ids, np.uint64) << np.uint64(PAGE_BITS)) \
+            | np.asarray(pages, dtype=np.uint64)
+        return self.engine.submit(OpBatch.gets(keys))
 
     def expire_session(self, session_id: int) -> None:
         lo = session_id << PAGE_BITS
@@ -158,14 +171,22 @@ class ServeLoop:
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         out = []
         for t in range(steps):
+            # Plan/submit the step's page lookups, decode while the
+            # registry shards execute, then collect — the engine's
+            # pipelining overlaps the two (serial engines execute the
+            # lookup inside lookup_submit; collection is then free).
             io0 = self.registry.io_reads
-            found, _ = self.registry.lookup(
+            pending = self.registry.lookup_submit(
                 session_ids, np.full(b, t % 4, dtype=np.uint64))
+            logits, cache = self._decode(self.params, tok, cache,
+                                         p_len + t)
+            t_wait = time.perf_counter()
+            pending.get_results()
+            self.stats.registry_stall_seconds += \
+                time.perf_counter() - t_wait
             self.stats.registry_lookups += b
             self.stats.registry_io_reads += \
                 self.registry.io_reads - io0
-            logits, cache = self._decode(self.params, tok, cache,
-                                         p_len + t)
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(
                 jnp.int32)[:, None]
             out.append(np.asarray(tok[:, 0]))
