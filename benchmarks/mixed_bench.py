@@ -59,7 +59,8 @@ import time
 
 import numpy as np
 
-from repro.core import GloranConfig, LSMDRTreeConfig, RAEConfig
+from repro.core import (GloranConfig, LSMDRTreeConfig, RAEConfig, RTree,
+                        StagingBuffer, disjointize)
 from repro.engine import Engine, EngineConfig, OpBatch
 from repro.lsm import LSMConfig
 
@@ -81,6 +82,7 @@ MIXES = {
     "read_mostly": (0.94, 0.04, 0.02),
     "scan_heavy": (0.65, 0.30, 0.05),
     "delete_heavy": (0.85, 0.05, 0.10),
+    "rdel_dominant": (0.25, 0.05, 0.70),
 }
 
 if SMOKE:
@@ -90,7 +92,8 @@ if SMOKE:
     BATCH = 8192
     ROUNDS = 1
     REPS = 2
-    MIX_KEYS = ("read_mostly", "delete_heavy")
+    MIX_KEYS = ("read_mostly", "rdel_dominant")
+    N_BUF = 6_000
 else:
     PRELOAD = 120_000 * SCALE
     N_RDEL = 1200 * SCALE
@@ -99,6 +102,7 @@ else:
     ROUNDS = 2
     REPS = 3
     MIX_KEYS = tuple(MIXES)
+    N_BUF = 24_000 * SCALE
 
 
 def lsm_cfg() -> LSMConfig:
@@ -292,6 +296,62 @@ def bench_cell(mix_name: str, shards: int) -> tuple[dict, dict]:
     return rows[False], rows[True]
 
 
+def bench_buffer_insert() -> dict:
+    """Delete-path staging microbench: before/after buffer-insert wall.
+
+    The same range-delete record stream runs through the historical
+    R-tree write buffer (per-record Python descent + disjointize on
+    flush — PR 3's hot spot in delete-heavy mixes) and through the
+    columnar ``StagingBuffer`` (burst-sized vectorized appends + the
+    incrementally merged ``drain_disjoint``), with identical flush
+    points (every ``buffer_capacity`` records).  Both walls include the
+    flush-time disjointize, so the ratio is the end-to-end buffer
+    absorption speedup the refactor delivers.
+    """
+    cap = gloran_cfg().index.buffer_capacity
+    rng = np.random.default_rng(12)
+    los = rng.integers(0, UNIVERSE - RDEL_LEN - 1,
+                       size=N_BUF).astype(np.uint64)
+    his = los + np.uint64(RDEL_LEN)
+    smins = np.zeros(N_BUF, dtype=np.uint64)
+    seqs = np.arange(1, N_BUF + 1, dtype=np.uint64)
+
+    t0 = time.perf_counter()
+    rt = RTree()
+    for lo, hi, s in zip(los.tolist(), his.tolist(), seqs.tolist()):
+        rt.insert(lo, hi, 0, s)
+        if rt.size >= cap:
+            disjointize(rt.extract_all())
+            rt.clear()
+    rtree_s = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    sb = StagingBuffer(cap)
+    for a0 in range(0, N_BUF, BURST):  # engine plan-step-sized arrivals
+        a1 = min(N_BUF, a0 + BURST)
+        at = a0
+        while at < a1:
+            take = min(max(cap - sb.size, 1), a1 - at)
+            sb.insert_batch(los[at:at + take], his[at:at + take],
+                            smins[at:at + take], seqs[at:at + take])
+            at += take
+            if sb.size >= cap:
+                sb.drain_disjoint()
+                sb.clear()
+    staging_s = time.perf_counter() - t1
+    out = {
+        "records": N_BUF,
+        "arrival_burst": BURST,
+        "buffer_capacity": cap,
+        "rtree_buffer_seconds": round(rtree_s, 4),
+        "staging_buffer_seconds": round(staging_s, 4),
+        "speedup": round(rtree_s / staging_s, 2),
+    }
+    print(f"# buffer insert x{N_BUF}: rtree {rtree_s:.3f}s -> staging "
+          f"{staging_s:.3f}s ({out['speedup']}x)", flush=True)
+    return out
+
+
 def run() -> dict:
     rows = []
     for mix_name in MIX_KEYS:
@@ -310,6 +370,7 @@ def run() -> dict:
     geo = float(np.exp(np.mean(np.log(
         [r["speedup_vs_serial_modeled"] for r in target])))) \
         if target else None
+    buf = bench_buffer_insert()
     result = {
         "config": {
             "preload_entries": PRELOAD,
@@ -322,6 +383,7 @@ def run() -> dict:
             "rdel_len": RDEL_LEN,
             "get_hit_frac": GET_HIT_FRAC,
             "submit_depth": DEPTH,
+            "buffer_insert_records": N_BUF,
             "mixes": {k: MIXES[k] for k in MIX_KEYS},
             "t_io_seconds": T_IO,
             "strategy": "gloran",
@@ -329,7 +391,11 @@ def run() -> dict:
             "smoke": SMOKE,
         },
         "rows": rows,
+        "buffer_insert": buf,
         "acceptance": {
+            # Delete-path refactor: columnar staging buffer vs the
+            # per-record R-tree write buffer, same stream + flush points.
+            "staging_buffer_insert_speedup": buf["speedup"],
             # Headline: modeled mixed-batch throughput, pipelined vs
             # serial, across the mixes at the max shard count (geomean;
             # per-mix and wall numbers are all in ``rows``).

@@ -41,4 +41,12 @@ s = d["acceptance"]["geomean_pipeline_speedup_max_shards"]
 assert s is not None and s >= 1.5, \
     f"pipelined mixed-batch speedup regressed: {s}x < 1.5x vs serial"
 print(f"check OK: pipelined mixed batches {s}x (modeled) vs serial")
+# Delete-heavy smoke row (range-delete-dominant mix) runs above; the
+# staging-buffer gate pins the columnar delete path's absorption win.
+b = d["acceptance"]["staging_buffer_insert_speedup"]
+assert b is not None and b >= 2.0, \
+    f"staging-buffer insert speedup regressed: {b}x < 2x vs R-tree buffer"
+print(f"check OK: columnar staging buffer inserts {b}x vs R-tree buffer")
+mixes = {r["mix"] for r in d["rows"]}
+assert "rdel_dominant" in mixes, "delete-heavy smoke row missing"
 EOF

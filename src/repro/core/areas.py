@@ -51,6 +51,14 @@ class AreaSet:
         return AreaSet(arr[:, 0].copy(), arr[:, 1].copy(),
                        arr[:, 2].copy(), arr[:, 3].copy())
 
+    @staticmethod
+    def from_arrays(lo, hi, smin, smax) -> "AreaSet":
+        """Columnar constructor: four flat arrays, no per-record tuples
+        (the staging-buffer / engine-batch shape)."""
+        return AreaSet(np.asarray(lo, dtype=UKEY), np.asarray(hi, dtype=UKEY),
+                       np.asarray(smin, dtype=UKEY),
+                       np.asarray(smax, dtype=UKEY))
+
     def to_records(self) -> np.ndarray:
         return np.stack([self.lo, self.hi, self.smin, self.smax], axis=1)
 

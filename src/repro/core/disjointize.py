@@ -28,9 +28,16 @@ from .areas import AreaSet, UKEY
 UMAX = np.iinfo(np.uint64).max
 
 
-def _canonical_single(s: AreaSet) -> AreaSet:
-    assert s.lo[0] < s.hi[0] and s.smin[0] < s.smax[0]
-    return s
+def _coalesce(lo, hi, smin, smax) -> AreaSet:
+    """Coalesce contiguous segments of a disjoint sorted run that carry
+    identical seq rectangles — the canonicalization step shared by the
+    two-way merge and the sorted-run fast path of ``disjointize``."""
+    brk = np.ones(len(lo), dtype=bool)
+    brk[1:] = ((lo[1:] != hi[:-1]) | (smin[1:] != smin[:-1])
+               | (smax[1:] != smax[:-1]))
+    starts = np.flatnonzero(brk)
+    ends = np.append(starts[1:], len(lo))
+    return AreaSet(lo[starts], hi[ends - 1], smin[starts], smax[starts])
 
 
 def merge_disjoint(a: AreaSet, b: AreaSet) -> AreaSet:
@@ -86,31 +93,44 @@ def merge_disjoint(a: AreaSet, b: AreaSet) -> AreaSet:
         return AreaSet.empty()
 
     # Coalesce contiguous segments with identical seq rectangles.
-    brk = np.ones(len(lo_k), dtype=bool)
-    brk[1:] = ((lo_k[1:] != hi_k[:-1]) | (smin_k[1:] != smin_k[:-1])
-               | (smax_k[1:] != smax_k[:-1]))
-    starts = np.flatnonzero(brk)
-    ends = np.append(starts[1:], len(lo_k))
-    return AreaSet(lo_k[starts], hi_k[ends - 1], smin_k[starts],
-                   smax_k[starts])
+    return _coalesce(lo_k, hi_k, smin_k, smax_k)
 
 
 def disjointize(s: AreaSet) -> AreaSet:
     """Disjointize an arbitrary set of effective areas (flush path).
 
-    Divide-and-conquer over ``merge_disjoint``; output is canonical
-    (sorted by lo, key-disjoint).  Equivalent to the paper's heap sweep
-    under the system invariant (all live ``smin`` at the GC floor).
+    Columnar and loop-free per record: the set is sorted by ``lo`` once,
+    split at the overlap points into maximal runs that are *already*
+    key-disjoint (vectorized break detection — a fully disjoint input
+    needs zero merges), each run is canonicalized, and the runs are then
+    reduced bottom-up with the vectorized two-way streaming merge.
+    Output is canonical (sorted by lo, key-disjoint, coalesced) —
+    equivalent to the paper's heap sweep under the system invariant
+    (all live ``smin`` at the GC floor).
     """
     n = len(s)
     if n == 0:
         return s
-    if n == 1:
-        return _canonical_single(s)
-    mid = n // 2
-    first = AreaSet(s.lo[:mid], s.hi[:mid], s.smin[:mid], s.smax[:mid])
-    second = AreaSet(s.lo[mid:], s.hi[mid:], s.smin[mid:], s.smax[mid:])
-    return merge_disjoint(disjointize(first), disjointize(second))
+    assert bool(np.all(s.lo < s.hi)) and bool(np.all(s.smin < s.smax))
+    srt = s.sorted_by_lo()
+    brk = np.flatnonzero(srt.hi[:-1] > srt.lo[1:]) + 1
+    bounds = np.concatenate([[0], brk, [n]])
+    parts = [_coalesce(srt.lo[a:b], srt.hi[a:b], srt.smin[a:b],
+                       srt.smax[a:b])
+             for a, b in zip(bounds[:-1].tolist(), bounds[1:].tolist())]
+    while len(parts) > 1:
+        nxt = [merge_disjoint(parts[i], parts[i + 1])
+               for i in range(0, len(parts) - 1, 2)]
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    return parts[0]
+
+
+def disjointize_arrays(lo, hi, smin, smax) -> AreaSet:
+    """Columnar entry point: disjointize four flat record arrays
+    directly (no per-record tuples — the staging-buffer flush shape)."""
+    return disjointize(AreaSet.from_arrays(lo, hi, smin, smax))
 
 
 def disjointize_oracle(s: AreaSet) -> AreaSet:

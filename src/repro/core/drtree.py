@@ -47,6 +47,12 @@ class DRTree:
             h += 1
         self.height = h
 
+    @classmethod
+    def from_arrays(cls, lo, hi, smin, smax, **kwargs) -> "DRTree":
+        """Columnar bulk load: four flat canonical arrays (sorted by lo,
+        key-disjoint) straight into a level — no per-record loop."""
+        return cls(AreaSet.from_arrays(lo, hi, smin, smax), **kwargs)
+
     def __len__(self) -> int:
         return len(self.areas)
 

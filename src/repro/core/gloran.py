@@ -60,18 +60,18 @@ class GloranIndex:
     def range_delete_batch(self, los, his, seqs) -> None:
         """Record a batch of range deletes (one engine plan step).
 
-        Index inserts stay sequential (buffer flushes must trigger at
-        the same points as per-call inserts), but the EVE estimator
-        absorbs the whole batch in chunked vectorized inserts — the
-        estimator bits, chain growth, and flush points are identical to
-        issuing the deletes one by one.
+        The whole batch lands columnar: the index's staging buffer
+        absorbs it in vectorized appends chunked at the flush boundaries
+        (``LSMDRTree.insert_batch`` — flush points, level shapes, and
+        I/O charges identical to per-call inserts), and the EVE
+        estimator absorbs it in chunked vectorized inserts (estimator
+        bits and chain growth identical to issuing one by one).
         """
         los = np.asarray(los, dtype=np.uint64)
         his = np.asarray(his, dtype=np.uint64)
         seqs = np.asarray(seqs, dtype=np.uint64)
         assert (los < his).all(), "empty range"
-        for lo, hi, seq in zip(los.tolist(), his.tolist(), seqs.tolist()):
-            self.index.insert(lo, hi, smax=seq, smin=0)
+        self.index.insert_batch(los, his, smaxs=seqs)
         if self.eve is not None:
             self.eve.insert_range_batch(los, his, seqs)
         self.num_range_deletes += len(los)
@@ -156,10 +156,27 @@ class GloranIndex:
     @property
     def memory_bytes(self) -> int:
         eve = self.eve.nbytes if self.eve is not None else 0
-        # The write buffer keeps all four record fields (lo, hi, smin, smax)
-        # resident; each is key-sized in the paper's model.
-        buf = self.index.buffer.size * 4 * self.config.index.key_size
-        return eve + buf
+        buf = self.index.buffer
+        if hasattr(buf, "model_bytes"):
+            # Columnar staging buffer: raw records (all four key-sized
+            # fields resident) plus its disjointized probe view.
+            b = buf.model_bytes(self.config.index.key_size)
+        else:
+            # R-tree write buffer (GLORAN0 baseline): four key-sized
+            # fields per record.
+            b = buf.size * 4 * self.config.index.key_size
+        return eve + b
+
+    def buffer_snapshot(self) -> dict:
+        """Staging-buffer occupancy (surfaced through ``EngineStats``)."""
+        buf = self.index.buffer
+        cap = self.config.index.buffer_capacity
+        return {
+            "records": int(buf.size),
+            "capacity": int(cap),
+            "occupancy": buf.size / cap if cap else 0.0,
+            "view_records": int(getattr(buf, "view_records", 0)),
+        }
 
     @property
     def disk_bytes(self) -> int:

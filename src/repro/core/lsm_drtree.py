@@ -1,15 +1,21 @@
 """LSM-DRtree: the global range-record index (paper §4.2).
 
-An in-memory R-tree write buffer absorbs range-record inserts; a flush
+An in-memory **columnar staging buffer** (``core.staging``) absorbs
+range-record inserts — one vectorized append per engine plan step, point
+stabbing via searchsorted over a lazily disjointized view; a flush
 disjointizes the buffer into a DR-tree pushed to level 1; level overflows
 trigger streaming two-way merge compactions (``merge_disjoint``) into the
 next level.  Level capacities grow by the size ratio T', so with buffer
 capacity F' the structure holds Q records in O(log_T'(Q/F')) levels —
-giving Lemma 4.3's update cost and Lemma 4.4's point-probe cost.
+giving Lemma 4.3's update cost and Lemma 4.4's point-probe cost.  Flush
+trigger points are identical to the historical per-record R-tree buffer
+(flush fires exactly when ``size`` reaches F'), so level shapes and I/O
+charges are unchanged by the columnar refactor.
 
 ``LSMRTree`` is the GLORAN0 baseline (Fig. 13a): identical level scheduling
-but levels keep *raw* overlapping areas in bulk-loaded R-trees, so probes
-pay overlap-induced multi-node descents.
+but levels keep *raw* overlapping areas in bulk-loaded R-trees (and keep
+the classic R-tree write buffer), so probes pay overlap-induced multi-node
+descents.
 """
 
 from __future__ import annotations
@@ -23,6 +29,7 @@ from .disjointize import disjointize, merge_disjoint
 from .drtree import DRTree
 from .iostats import IOStats
 from .rtree import RTree
+from .staging import StagingBuffer
 
 
 @dataclass
@@ -42,7 +49,7 @@ class LSMDRTree:
         self.config = config or LSMDRTreeConfig()
         self.io = io if io is not None else IOStats(
             block_size=self.config.block_size)
-        self.buffer = RTree()
+        self.buffer = StagingBuffer(self.config.buffer_capacity)
         self.levels: list[DRTree | None] = []
         self.records_inserted = 0
 
@@ -65,10 +72,35 @@ class LSMDRTree:
         if self.buffer.size >= self.config.buffer_capacity:
             self.flush()
 
+    def insert_batch(self, los, his, smaxs, smins=None) -> None:
+        """Absorb a batch of range-delete records in one vectorized call.
+
+        Chunked at the buffer-capacity boundaries so flushes fire at
+        exactly the points a per-record insert loop would hit — level
+        shapes, disjointize inputs, and I/O charges are identical.
+        """
+        los = np.asarray(los, dtype=np.uint64)
+        his = np.asarray(his, dtype=np.uint64)
+        smaxs = np.asarray(smaxs, dtype=np.uint64)
+        smins = (np.zeros(len(los), dtype=np.uint64) if smins is None
+                 else np.asarray(smins, dtype=np.uint64))
+        n = len(los)
+        at = 0
+        while at < n:
+            room = self.config.buffer_capacity - self.buffer.size
+            take = min(max(room, 1), n - at)
+            self.buffer.insert_batch(los[at:at + take], his[at:at + take],
+                                     smins[at:at + take],
+                                     smaxs[at:at + take])
+            at += take
+            if self.buffer.size >= self.config.buffer_capacity:
+                self.flush()
+        self.records_inserted += n
+
     def flush(self) -> None:
         if self.buffer.size == 0:
             return
-        areas = disjointize(self.buffer.extract_all())
+        areas = self.buffer.drain_disjoint()
         self.buffer.clear()
         tree = self._make_drtree(areas)
         self.io.write_sequential(len(areas) * 2 * self.config.key_size,
@@ -111,8 +143,7 @@ class LSMDRTree:
         seqs = np.asarray(seqs, dtype=np.uint64)
         out = np.zeros(len(keys), dtype=bool)
         if self.buffer.size:
-            buf = self.buffer.extract_all()
-            out |= buf.covers_batch_bruteforce(keys, seqs)
+            out |= self.buffer.covers_batch(keys, seqs)
         for lvl in self.levels:
             if lvl is not None:
                 todo = ~out
@@ -194,6 +225,22 @@ class LSMRTree:
         self.buffer.insert(lo, hi, smin, smax)
         if self.buffer.size >= self.config.buffer_capacity:
             self.flush()
+
+    def insert_batch(self, los, his, smaxs, smins=None) -> None:
+        """Batch absorb (API parity with ``LSMDRTree.insert_batch``).
+
+        The baseline's R-tree buffer has no vectorized path — each
+        record still pays its Python descent, which is exactly the cost
+        the GLORAN0 comparison exists to expose.
+        """
+        los = np.asarray(los, dtype=np.uint64)
+        his = np.asarray(his, dtype=np.uint64)
+        smaxs = np.asarray(smaxs, dtype=np.uint64)
+        smins = (np.zeros(len(los), dtype=np.uint64) if smins is None
+                 else np.asarray(smins, dtype=np.uint64))
+        for lo, hi, smax, smin in zip(los.tolist(), his.tolist(),
+                                      smaxs.tolist(), smins.tolist()):
+            self.insert(lo, hi, smax=smax, smin=smin)
 
     def flush(self) -> None:
         if self.buffer.size == 0:

@@ -283,7 +283,9 @@ class Engine:
             sum(sh.kernels.interval_calls for sh in self.shards),
             sum(sh.kernels.interval_queries for sh in self.shards),
             sum(sh.kernels.bloom_calls for sh in self.shards),
-            sum(sh.kernels.bloom_queries for sh in self.shards))
+            sum(sh.kernels.bloom_queries for sh in self.shards),
+            sum(sh.kernels.merge_calls for sh in self.shards),
+            sum(sh.kernels.merge_keys for sh in self.shards))
 
     def cache_snapshot(self) -> dict:
         snaps = [sh.cache.snapshot() for sh in self.shards]
@@ -295,6 +297,12 @@ class Engine:
 
     def stats(self) -> dict:
         self.drain()
+        staging = [
+            {"shard": s, **sh.tree.gloran.buffer_snapshot()}
+            for s, sh in enumerate(self.shards)
+            if sh.tree.gloran is not None]
+        if staging:
+            self.stats_.record_staging(staging)
         return {
             "num_shards": self.num_shards,
             "partition": self.router.partition,

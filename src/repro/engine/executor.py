@@ -15,7 +15,16 @@ read path (``LSMTree.get_batch``) with three hooks swapped in:
                arrays are clamped into u32 working space (exact for
                u32-range queries) and padded to power-of-two tiles so
                jit re-traces stay bounded by O(log) distinct shapes,
-               not one per compaction.
+               not one per compaction,
+  rank_fn      scan merge-back positions through the
+               ``repro.kernels.merge`` merge-rank kernel (bit-exact with
+               the host searchsorted pair) once a two-way round's runs
+               are big enough to pay for a launch.
+
+Range-delete plan steps stay columnar end-to-end: the step's clipped
+``los``/``his`` arrays flow untouched through
+``LSMTree.range_delete_arrays`` into the GLORAN staging buffer's
+vectorized batch append.
 
 The control flow stays single-sourced in ``LSMTree`` / ``GloranIndex`` /
 ``LSMDRTree``; hooks only replace HOW a verdict is computed, never what
@@ -33,6 +42,7 @@ import numpy as np
 from ..core.eve import fold64to32
 from ..kernels.bloom.ops import bloom_probe
 from ..kernels.interval.ops import interval_query
+from ..kernels.merge.ops import merge_ranks
 from ..lsm.tree import LSMTree
 from .cache import BlockCache
 from .plan import OP_DELETE, OP_GET, OP_PUT, OP_RANGE_SCAN, ShardPlan
@@ -51,9 +61,11 @@ class EngineConfig:
     cache_blocks: int = 0  # per-shard block cache capacity; 0 = off
     use_bloom_kernel: bool = True
     use_interval_kernel: bool = True
+    use_merge_kernel: bool = True
     kernel_min_batch: int = 256  # sub-batch size worth a kernel launch
     kernel_min_areas: int = 64  # DR-tree level size worth a launch
     kernel_min_filter: int = 512  # SSTable entries worth a launch
+    kernel_min_merge: int = 1024  # total keys in a 2-way merge round
     interpret: bool | None = None  # None = auto (non-TPU -> interpret)
 
 
@@ -89,6 +101,11 @@ class ShardExecutor:
         (GLORAN absorbs the batch in one index/estimator call)."""
         self.tree.range_delete_batch(ranges)
 
+    def range_delete_arrays(self, los: np.ndarray, his: np.ndarray) -> None:
+        """Columnar batch range delete: the plan step's clipped bound
+        arrays go straight into the tree (no tuple round trip)."""
+        self.tree.range_delete_arrays(los, his)
+
     def flush(self) -> None:
         """Flush the shard's memtable (and LRR buffer) to level 0."""
         self.tree.flush()
@@ -121,8 +138,7 @@ class ShardExecutor:
                     list(zip(step.los.tolist(), step.his.tolist())))
                 payloads.append((OP_RANGE_SCAN, step.idx, res))
             else:  # OP_RANGE_DELETE (bounds already clipped per shard)
-                self.range_delete_batch(
-                    list(zip(step.los.tolist(), step.his.tolist())))
+                self.range_delete_arrays(step.los, step.his)
         return payloads, time.perf_counter() - t0
 
     # ------------------------------------------------------------ reads
@@ -150,12 +166,40 @@ class ShardExecutor:
 
     def range_scan_batch(self, ranges) -> list:
         """Batched range scans through the tree's one-pass batch path,
-        with GLORAN validity filtering on the kernel hook and slice
-        charges absorbed by the shard's block cache; one (keys, vals)
-        pair per requested [lo, hi), in request order."""
+        with GLORAN validity filtering on the kernel hook, merge-back
+        positions on the merge-rank kernel hook, and slice charges
+        absorbed by the shard's block cache; one (keys, vals) pair per
+        requested [lo, hi), in request order."""
         return self.tree.range_scan_batch(
             ranges, validity_fn=self._validity_fn(),
-            cache=self.cache if self.cache.enabled else None)
+            cache=self.cache if self.cache.enabled else None,
+            rank_fn=self._rank_fn())
+
+    # ----------------------------------------------------- merge kernel
+    def _rank_fn(self):
+        """The sorted-view merge hook: two-way merge-round output
+        positions through the ``merge_ranks`` Pallas kernel when the
+        round is big enough to pay for a launch and both runs fit u32
+        working space; declines (None -> host searchsorted) otherwise.
+        """
+        cfg = self.config
+        if not cfg.use_merge_kernel:
+            return None
+
+        def rank(ka: np.ndarray, kb: np.ndarray):
+            n = len(ka) + len(kb)
+            if (n < cfg.kernel_min_merge or not len(ka) or not len(kb)
+                    or int(ka[-1]) >= _U32_LIMIT
+                    or int(kb[-1]) >= _U32_LIMIT):
+                return None
+            pa, pb = merge_ranks(ka.astype(np.uint32),
+                                 kb.astype(np.uint32),
+                                 interpret=cfg.interpret)
+            self.kernels.merge_calls += 1
+            self.kernels.merge_keys += n
+            return pa, pb
+
+        return rank
 
     # --------------------------------------------------- filter kernels
     def _bloom_maybe(self, lvl, keys: np.ndarray) -> np.ndarray:

@@ -13,12 +13,14 @@ from dataclasses import dataclass, field
 
 @dataclass
 class KernelCounters:
-    """How often the fused Pallas filter stage actually ran."""
+    """How often the fused Pallas filter/merge stages actually ran."""
 
     interval_calls: int = 0     # interval_query launches (DR-tree levels)
     interval_queries: int = 0   # point-stab verdicts produced by them
     bloom_calls: int = 0        # bloom_probe launches (SSTable filters)
     bloom_queries: int = 0      # filter verdicts produced by them
+    merge_calls: int = 0        # merge_ranks launches (scan merge rounds)
+    merge_keys: int = 0         # keys positioned by them
 
     def snapshot(self) -> dict:
         return {
@@ -26,6 +28,8 @@ class KernelCounters:
             "interval_queries": self.interval_queries,
             "bloom_calls": self.bloom_calls,
             "bloom_queries": self.bloom_queries,
+            "merge_calls": self.merge_calls,
+            "merge_keys": self.merge_keys,
         }
 
 
@@ -49,6 +53,7 @@ class EngineStats:
     shard_stall: dict = field(default_factory=dict)  # shard -> idle s
     pipelined_batches: int = 0
     serial_batches: int = 0
+    staging: dict = field(default_factory=dict)      # buffer occupancy
 
     def record(self, op: str, n: int, seconds: float,
                io_reads: int = 0, io_writes: int = 0) -> None:
@@ -79,6 +84,22 @@ class EngineStats:
             self.shard_stall[s] = self.shard_stall.get(s, 0.0) + \
                 float(crit - w)
 
+    def record_staging(self, per_shard: list[dict]) -> None:
+        """Current staging-buffer occupancy across the GLORAN shards.
+
+        ``per_shard`` entries come from ``GloranIndex.buffer_snapshot``;
+        the rollup keeps the fleet totals and the fill fraction so
+        "how close is the next index flush" is answerable from stats.
+        """
+        recs = sum(d["records"] for d in per_shard)
+        cap = sum(d["capacity"] for d in per_shard)
+        self.staging = {
+            "records": recs,
+            "capacity": cap,
+            "occupancy": round(recs / cap, 4) if cap else 0.0,
+            "per_shard": per_shard,
+        }
+
     def ops_per_sec(self, op: str) -> float:
         return self.ops.get(op, 0) / max(self.wall.get(op, 0.0), 1e-12)
 
@@ -101,11 +122,13 @@ class EngineStats:
         charged while serving that class; ``io_per_op`` blocks per op;
         ``shard_wall_seconds`` / ``shard_stall_seconds`` per-shard
         busy/idle time across submitted batches; ``pipelined_batches`` /
-        ``serial_batches`` how each batch executed.
+        ``serial_batches`` how each batch executed; ``staging_buffer``
+        the current range-delete staging-buffer occupancy.
         """
         return {
             "pipelined_batches": self.pipelined_batches,
             "serial_batches": self.serial_batches,
+            "staging_buffer": dict(self.staging),
             "shard_wall_seconds": {s: round(v, 6)
                                    for s, v in self.shard_wall.items()},
             "shard_stall_seconds": {s: round(v, 6)

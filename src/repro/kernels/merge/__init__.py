@@ -1,0 +1,16 @@
+"""Device-side sorted-view merge: tournament merge-rank kernel.
+
+An LSM range scan merges one sorted slice per run.  The position of
+every element in the merged output is its *rank*: its own index plus
+the count of elements from the other run that precede it — exactly the
+searchsorted pair ``lsm.merge.merge_two`` computes on the host.  This
+package lifts that rank computation onto device as a Pallas kernel
+(fixed-depth vectorized binary search per query tile, the same shape as
+``kernels.interval``), so the k-way tournament's O(n log n) compare
+work runs on the VPU and the host only scatters.
+"""
+
+from .ops import merge_ranks
+from .ref import merge_ranks_ref
+
+__all__ = ["merge_ranks", "merge_ranks_ref"]

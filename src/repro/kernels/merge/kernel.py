@@ -1,0 +1,75 @@
+"""Pallas kernel: merge-rank (vectorized binary search) over a sorted run.
+
+One tournament-merge round of two sorted runs needs, per element, the
+count of elements of the *other* run that precede it (strictly or
+non-strictly, depending on the tie side).  That count is a lower/upper
+bound binary search — data-independent depth, so it vectorizes exactly
+like the interval point-stab kernel: the resident run is VMEM-whole, a
+grid of (rows x 128) query tiles runs a fixed-depth search on the VPU.
+
+Runs larger than VMEM are chunked at the ops layer: a sorted run's
+chunks are contiguous sorted slices, so per-chunk counts ADD together.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _rank_kernel(q_ref, arr_ref, out_ref, *, n: int, steps: int, leq: bool):
+    q = q_ref[...]  # (rows, LANES) uint32 queries
+    arr = arr_ref[...].reshape(-1)  # (n,) sorted uint32
+
+    # Fixed-depth binary search: left converges to the count of arr
+    # elements < q (leq=False, searchsorted 'left') or <= q (leq=True,
+    # searchsorted 'right').
+    left = jnp.zeros(q.shape, dtype=jnp.int32)
+    right = jnp.full(q.shape, n, dtype=jnp.int32)
+
+    def body(_, lr):
+        left, right = lr
+        active = left < right  # freeze converged lanes
+        mid = (left + right) // 2
+        midc = jnp.clip(mid, 0, n - 1)
+        v = jnp.take(arr, midc, axis=0)
+        go_right = (v <= q) if leq else (v < q)
+        left = jnp.where(active & go_right, mid + 1, left)
+        right = jnp.where(active & ~go_right, mid, right)
+        return left, right
+
+    left, right = jax.lax.fori_loop(0, steps, body, (left, right))
+    out_ref[...] = left
+
+
+@functools.partial(jax.jit, static_argnames=("leq", "block_rows",
+                                             "interpret"))
+def merge_rank_pallas(q, arr, *, leq: bool, block_rows: int = 8,
+                      interpret: bool = True) -> jnp.ndarray:
+    """q: (rows, 128) uint32 queries; arr: (n,) sorted uint32.
+
+    Returns int32 (rows, 128): per query, the count of ``arr`` elements
+    strictly below it (``leq=False``) or at-or-below it (``leq=True``)
+    — bit-exact with ``np.searchsorted(arr, q, side='left'/'right')``.
+    """
+    n = arr.shape[0]
+    rows = q.shape[0]
+    assert rows % block_rows == 0
+    steps = max(1, math.ceil(math.log2(n + 1)) + 1)  # converge + safety
+    grid = (rows // block_rows,)
+    full = pl.BlockSpec((n,), lambda i: (0,))
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_rank_kernel, n=n, steps=steps, leq=leq),
+        grid=grid,
+        in_specs=[tile, full],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(q, arr)

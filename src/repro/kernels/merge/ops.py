@@ -1,0 +1,79 @@
+"""Public dispatch for the merge-rank kernel.
+
+Pads the query side to (rows x 128) tiles, chunks VMEM-oversized
+resident runs (contiguous sorted slices — per-chunk counts add), and
+offers a jit'd XLA fallback (``compiled=True``) for backends where
+Pallas can only interpret (CPU): there the searchsorted pair compiles
+through XLA instead, so CI exercises a compiled artifact everywhere
+while TPUs compile the Pallas kernel itself.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import LANES, merge_rank_pallas
+from .ref import merge_ranks_ref
+
+# 4 B x 1 Mi = 4 MB resident run per call keeps run + tiles under VMEM.
+MAX_KEYS_PER_CALL = 1 << 20
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+_merge_ranks_xla = jax.jit(merge_ranks_ref)
+
+
+def _rank(queries: np.ndarray, arr: np.ndarray, *, leq: bool,
+          block_rows: int, interpret: bool) -> np.ndarray:
+    """Counts of ``arr`` elements preceding each query (chunk-summed)."""
+    q32 = jnp.asarray(queries, jnp.uint32)
+    n = q32.shape[0]
+    tile = block_rows * LANES
+    n_pad = -n % tile
+    q = jnp.pad(q32, (0, n_pad)).reshape(-1, LANES)
+    total = jnp.zeros(q.shape, dtype=jnp.int32)
+    m = arr.shape[0]
+    for a0 in range(0, m, MAX_KEYS_PER_CALL):
+        a1 = min(m, a0 + MAX_KEYS_PER_CALL)
+        total = total + merge_rank_pallas(
+            q, jnp.asarray(arr[a0:a1], jnp.uint32), leq=leq,
+            block_rows=block_rows, interpret=interpret)
+    return np.asarray(total).reshape(-1)[:n]
+
+
+def merge_ranks(ka: np.ndarray, kb: np.ndarray, *, block_rows: int = 8,
+                interpret: bool | None = None,
+                compiled: bool = False):
+    """Merged-output positions of two key-sorted uint32 runs.
+
+    Returns ``(pa, pb)`` int64 numpy arrays: ``pa[i]`` is the slot of
+    ``ka[i]`` in the merged order, ``pb`` likewise; ties across runs
+    place a-entries first — bit-exact with the host searchsorted pair in
+    ``lsm.merge.merge_two`` (duplicates within and across runs allowed).
+
+    ``compiled=True`` routes through the jit'd XLA path instead of the
+    Pallas kernel; the default Pallas path interprets off-TPU.
+    """
+    ka = np.asarray(ka)
+    kb = np.asarray(kb)
+    na, nb = len(ka), len(kb)
+    if interpret is None:
+        interpret = _default_interpret()
+    if compiled:
+        pa, pb = _merge_ranks_xla(jnp.asarray(ka, jnp.uint32),
+                                  jnp.asarray(kb, jnp.uint32))
+        return (np.asarray(pa).astype(np.int64),
+                np.asarray(pb).astype(np.int64))
+    ra = _rank(ka, kb, leq=False, block_rows=block_rows,
+               interpret=interpret)
+    rb = _rank(kb, ka, leq=True, block_rows=block_rows,
+               interpret=interpret)
+    return (np.arange(na, dtype=np.int64) + ra,
+            np.arange(nb, dtype=np.int64) + rb)

@@ -1,0 +1,28 @@
+"""Oracles for the merge-rank kernel (host numpy + pure jnp)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def merge_ranks_np(ka: np.ndarray, kb: np.ndarray):
+    """Host oracle: the exact position pair ``lsm.merge.merge_two``
+    computes.  ``pa[i]`` is the merged-output slot of ``ka[i]``, ``pb``
+    likewise; ties across runs place a-entries first."""
+    na, nb = len(ka), len(kb)
+    pa = np.arange(na) + np.searchsorted(kb, ka, side="left")
+    pb = np.arange(nb) + np.searchsorted(ka, kb, side="right")
+    return pa, pb
+
+
+def merge_ranks_ref(ka, kb):
+    """Pure-jnp oracle (jit-compilable): same convention as
+    ``merge_ranks_np``."""
+    ka = jnp.asarray(ka)
+    kb = jnp.asarray(kb)
+    pa = jnp.arange(ka.shape[0], dtype=jnp.int32) + \
+        jnp.searchsorted(kb, ka, side="left").astype(jnp.int32)
+    pb = jnp.arange(kb.shape[0], dtype=jnp.int32) + \
+        jnp.searchsorted(ka, kb, side="right").astype(jnp.int32)
+    return pa, pb

@@ -20,7 +20,7 @@ import numpy as np
 Run = tuple  # (keys, seqs, types, vals) | (keys, vals) | ... sorted by [0]
 
 
-def merge_two(a: Run, b: Run) -> Run:
+def merge_two(a: Run, b: Run, rank_fn=None) -> Run:
     """Merge two key-sorted runs into one, preserving all entries.
 
     Works for any tuple arity as long as element 0 is the sort key; the
@@ -28,6 +28,11 @@ def merge_two(a: Run, b: Run) -> Run:
     merge is a pure scatter (no comparison loop).  Ties place ``a``'s
     entries first (stable), which callers never rely on — duplicates are
     resolved by ``newest_wins`` on seq, not by run order.
+
+    ``rank_fn(ka, kb) -> (pa, pb) | None`` optionally replaces HOW the
+    ranks are computed (``repro.engine`` supplies the Pallas merge-rank
+    kernel, which gates itself and declines with None); the scatter —
+    and the result — is identical either way.
     """
     ka, kb = a[0], b[0]
     na, nb = len(ka), len(kb)
@@ -35,8 +40,12 @@ def merge_two(a: Run, b: Run) -> Run:
         return b
     if nb == 0:
         return a
-    pa = np.arange(na) + np.searchsorted(kb, ka, side="left")
-    pb = np.arange(nb) + np.searchsorted(ka, kb, side="right")
+    ranks = rank_fn(ka, kb) if rank_fn is not None else None
+    if ranks is not None:
+        pa, pb = ranks
+    else:
+        pa = np.arange(na) + np.searchsorted(kb, ka, side="left")
+        pb = np.arange(nb) + np.searchsorted(ka, kb, side="right")
     out = []
     for xa, xb in zip(a, b):
         x = np.empty(na + nb, dtype=xa.dtype)
@@ -52,17 +61,19 @@ def empty_run() -> Run:
     return z, z.copy(), np.zeros(0, np.uint8), z.copy()
 
 
-def merge_runs(parts: list[Run], empty: Run | None = None) -> Run:
+def merge_runs(parts: list[Run], empty: Run | None = None,
+               rank_fn=None) -> Run:
     """Tournament-merge k key-sorted runs; duplicates stay adjacent.
 
     ``empty`` is returned when every part is empty (defaults to the
     4-tuple ``empty_run``; pass a matching-arity tuple otherwise).
+    ``rank_fn`` is forwarded to every two-way round (see ``merge_two``).
     """
     parts = [p for p in parts if len(p[0])]
     if not parts:
         return empty if empty is not None else empty_run()
     while len(parts) > 1:
-        nxt = [merge_two(parts[i], parts[i + 1])
+        nxt = [merge_two(parts[i], parts[i + 1], rank_fn=rank_fn)
                for i in range(0, len(parts) - 1, 2)]
         if len(parts) % 2:
             nxt.append(parts[-1])

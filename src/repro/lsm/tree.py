@@ -110,25 +110,37 @@ class LSMTree:
             self.gloran.range_delete(lo, hi, self._next_seq())
 
     def range_delete_batch(self, ranges) -> None:
-        """Apply a batch of [lo, hi) range deletes in request order.
-
-        Under GLORAN the whole batch goes to the global index in one
-        call (sequence numbers assigned in order, estimator inserts
-        vectorized — state is identical to per-call deletes); the other
-        strategies apply their per-range write paths sequentially.
-        """
+        """Apply a batch of [lo, hi) range deletes in request order
+        (tuple convenience over the columnar ``range_delete_arrays``)."""
         ranges = list(ranges)
         if not ranges:
             return
+        self.range_delete_arrays(
+            np.asarray([r[0] for r in ranges], dtype=np.uint64),
+            np.asarray([r[1] for r in ranges], dtype=np.uint64))
+
+    def range_delete_arrays(self, los: np.ndarray, his: np.ndarray) -> None:
+        """Columnar batch range delete: two flat bound arrays, request
+        order.
+
+        Under GLORAN the whole batch stays columnar end-to-end — one
+        call into the global index whose staging buffer absorbs it as
+        vectorized appends (sequence numbers assigned in order, flush
+        points identical to per-call deletes, estimator inserts
+        vectorized); the other strategies apply their per-range write
+        paths sequentially.
+        """
+        los = np.asarray(los, dtype=np.uint64)
+        his = np.asarray(his, dtype=np.uint64)
+        if len(los) == 0:
+            return
         if self.strategy == "gloran":
-            los = np.asarray([r[0] for r in ranges], dtype=np.uint64)
-            his = np.asarray([r[1] for r in ranges], dtype=np.uint64)
             assert (los < his).all()
             self.gloran.range_delete_batch(los, his,
-                                           self._next_seqs(len(ranges)))
+                                           self._next_seqs(len(los)))
         else:
-            for lo, hi in ranges:
-                self.range_delete(lo, hi)
+            for lo, hi in zip(los.tolist(), his.tolist()):
+                self.range_delete(int(lo), int(hi))
 
     # -------------------------------------------------------------- reads
     def _mem_rt_cover(self, key: int) -> int:
@@ -247,12 +259,13 @@ class LSMTree:
                 rows[order, 1].astype(np.uint8), rows[order, 2])
 
     def range_scan(self, lo: int, hi: int, *, validity_fn=None,
-                   cache=None):
+                   cache=None, rank_fn=None):
         """All live entries with lo <= key < hi. Returns (keys, vals)."""
         return self.range_scan_batch([(lo, hi)], validity_fn=validity_fn,
-                                     cache=cache)[0]
+                                     cache=cache, rank_fn=rank_fn)[0]
 
-    def range_scan_batch(self, ranges, *, validity_fn=None, cache=None):
+    def range_scan_batch(self, ranges, *, validity_fn=None, cache=None,
+                         rank_fn=None):
         """Execute many range scans in one pass over the tree.
 
         Each [lo, hi) produces the same (keys, vals) pair a per-call
@@ -267,7 +280,10 @@ class LSMTree:
         interval-kernel path), exactly like ``get_batch``; ``cache``
         optionally absorbs the data-block charges of each level's slices
         (scan-resident blocks stop paying I/O, see
-        ``SSTable.range_slice_many``).
+        ``SSTable.range_slice_many``); ``rank_fn`` optionally replaces
+        how each two-way merge round computes output positions
+        (``repro.engine`` supplies the Pallas merge-rank kernel — see
+        ``lsm.merge.merge_two``).
         """
         ranges = [(int(lo), int(hi)) for lo, hi in ranges]
         nr = len(ranges)
@@ -285,7 +301,7 @@ class LSMTree:
         for j in range(nr):
             parts = [tuple(x[m_lo[j]:m_hi[j]] for x in mem)]
             parts += [slices[j] for slices in per_level]
-            merged.append(newest_wins(*merge_runs(parts)))
+            merged.append(newest_wins(*merge_runs(parts, rank_fn=rank_fn)))
         live = [m[2] == PUT for m in merged]
         # Validity filtering, batched across every non-empty range.
         nz = [j for j in range(nr) if len(merged[j][0])]

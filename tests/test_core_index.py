@@ -303,8 +303,10 @@ class TestGloranIndex:
         assert (g_eve.io.reads - r0_eve) < (g_raw.io.reads - r0_raw)
 
     def test_memory_bytes_charges_all_four_buffer_fields(self):
-        """The R-tree write buffer holds (lo, hi, smin, smax) per record:
-        4 key-sized fields, not 2."""
+        """The staging write buffer holds (lo, hi, smin, smax) per
+        record: 4 key-sized fields, not 2 (the lazy disjoint probe view
+        is empty until the first probe — see test_staging for the view
+        accounting)."""
         cfg = GloranConfig(index=LSMDRTreeConfig(buffer_capacity=1024,
                                                  key_size=16),
                            use_eve=False)

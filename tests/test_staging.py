@@ -1,0 +1,256 @@
+"""StagingBuffer vs. the historical R-tree write buffer: parity suite.
+
+The columnar staging buffer replaced the Guttman R-tree as the
+LSM-DRtree's write buffer.  These tests pin the contract that made that
+swap invisible: identical flush trigger points, identical disjointize
+output at every flush, and identical point-stab answers over arbitrary
+insert/probe interleavings (under the system invariant — ``smin`` at
+the GC floor — which is what ``GloranIndex.range_delete`` always
+inserts).
+"""
+
+import numpy as np
+import pytest
+
+try:  # optional dev dependency: property tests only run when present
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.core import (AreaSet, DRTree, GloranConfig, GloranIndex,
+                        LSMDRTree, LSMDRTreeConfig, RTree, StagingBuffer,
+                        disjointize, disjointize_arrays)
+
+
+class RTreeBufferHarness:
+    """The pre-refactor buffer protocol: per-record R-tree descent on
+    insert, raw-rectangle stabbing on probe, disjointize-on-flush."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.tree = RTree()
+        self.flushes = []
+
+    def insert(self, lo, hi, smin, smax):
+        self.tree.insert(lo, hi, smin, smax)
+        if self.tree.size >= self.capacity:
+            self.flushes.append(disjointize(self.tree.extract_all()))
+            self.tree.clear()
+
+    def covers(self, key, seq):
+        return self.tree.covers(key, seq)
+
+    @property
+    def size(self):
+        return self.tree.size
+
+
+class StagingHarness:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.buf = StagingBuffer(capacity)
+        self.flushes = []
+
+    def insert(self, lo, hi, smin, smax):
+        self.buf.insert(lo, hi, smin, smax)
+        if self.buf.size >= self.capacity:
+            # Both flush forms must agree: the incrementally merged view
+            # and a one-shot disjointize of the raw records.
+            drained = self.buf.drain_disjoint()
+            oneshot = disjointize(self.buf.extract_all())
+            np.testing.assert_array_equal(drained.to_records(),
+                                          oneshot.to_records())
+            self.flushes.append(drained)
+            self.buf.clear()
+
+    def covers(self, key, seq):
+        return self.buf.covers(key, seq)
+
+    @property
+    def size(self):
+        return self.buf.size
+
+
+def _run_interleaving(ops, capacity):
+    """Drive both buffers through one op stream; assert parity."""
+    old = RTreeBufferHarness(capacity)
+    new = StagingHarness(capacity)
+    for op in ops:
+        if op[0] == "ins":
+            _, lo, hi, smin, smax = op
+            old.insert(lo, hi, smin, smax)
+            new.insert(lo, hi, smin, smax)
+            assert old.size == new.size  # identical flush points
+        else:
+            _, key, seq = op
+            assert old.covers(key, seq) == new.covers(key, seq), \
+                f"probe divergence at {op}"
+    assert len(old.flushes) == len(new.flushes)
+    for a, b in zip(old.flushes, new.flushes):
+        np.testing.assert_array_equal(a.to_records(), b.to_records())
+
+
+if HAS_HYPOTHESIS:
+    @st.composite
+    def interleavings(draw, max_ops=120, universe=300, max_seq=80):
+        """Mixed insert/probe streams under the system invariant."""
+        floor = draw(st.integers(0, 4))
+        n = draw(st.integers(1, max_ops))
+        ops = []
+        for _ in range(n):
+            if draw(st.booleans()):
+                lo = draw(st.integers(0, universe - 2))
+                hi = draw(st.integers(lo + 1, universe))
+                smax = draw(st.integers(floor + 1, max_seq))
+                ops.append(("ins", lo, hi, floor, smax))
+            else:
+                ops.append(("probe", draw(st.integers(0, universe + 10)),
+                            draw(st.integers(0, max_seq + 10))))
+        return ops
+
+    @settings(max_examples=80, deadline=None)
+    @given(interleavings(), st.integers(2, 24))
+    def test_staging_matches_rtree_buffer(ops, capacity):
+        _run_interleaving(ops, capacity)
+
+    @settings(max_examples=60, deadline=None)
+    @given(interleavings(max_ops=60), st.data())
+    def test_staging_covers_batch_matches_scalar(ops, data):
+        buf = StagingBuffer()
+        for op in ops:
+            if op[0] == "ins":
+                _, lo, hi, smin, smax = op
+                buf.insert(lo, hi, smin, smax)
+        keys = np.array([data.draw(st.integers(0, 310)) for _ in range(16)],
+                        dtype=np.uint64)
+        seqs = np.array([data.draw(st.integers(0, 90)) for _ in range(16)],
+                        dtype=np.uint64)
+        got = buf.covers_batch(keys, seqs)
+        want = np.array([buf.covers(int(k), int(s))
+                         for k, s in zip(keys, seqs)])
+        np.testing.assert_array_equal(got, want)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; property tests "
+                             "not collected")
+    def test_staging_property_suite_requires_hypothesis():
+        pass
+
+
+def test_fixed_interleaving_parity():
+    """A deterministic regression net under the property tests."""
+    rng = np.random.default_rng(42)
+    ops = []
+    for _ in range(400):
+        if rng.random() < 0.7:
+            lo = int(rng.integers(0, 2000))
+            hi = lo + int(rng.integers(1, 150))
+            ops.append(("ins", lo, hi, 0, int(rng.integers(1, 500))))
+        else:
+            ops.append(("probe", int(rng.integers(0, 2200)),
+                        int(rng.integers(0, 520))))
+    _run_interleaving(ops, capacity=16)
+
+
+def test_insert_batch_chunks_at_flush_boundaries():
+    """Batch absorb must flush at exactly the per-record trigger points:
+    level shapes and record counts end up identical."""
+    cfg = LSMDRTreeConfig(buffer_capacity=32, size_ratio=3)
+    one, batch = LSMDRTree(cfg), LSMDRTree(cfg)
+    rng = np.random.default_rng(7)
+    los = rng.integers(0, 50_000, size=500).astype(np.uint64)
+    his = los + rng.integers(1, 400, size=500).astype(np.uint64)
+    seqs = np.arange(1, 501, dtype=np.uint64)
+    for lo, hi, s in zip(los.tolist(), his.tolist(), seqs.tolist()):
+        one.insert(lo, hi, smax=s)
+    batch.insert_batch(los, his, smaxs=seqs)
+    assert one.buffer.size == batch.buffer.size
+    assert one.records_inserted == batch.records_inserted
+    assert len(one.levels) == len(batch.levels)
+    for a, b in zip(one.levels, batch.levels):
+        assert (a is None) == (b is None)
+        if a is not None:
+            np.testing.assert_array_equal(a.areas.to_records(),
+                                          b.areas.to_records())
+    assert one.io.snapshot() == batch.io.snapshot()
+
+
+def test_insert_batch_larger_than_capacity():
+    cfg = LSMDRTreeConfig(buffer_capacity=8, size_ratio=2)
+    t = LSMDRTree(cfg)
+    n = 100
+    los = np.arange(n, dtype=np.uint64) * 10
+    t.insert_batch(los, los + 5, smaxs=np.arange(1, n + 1, dtype=np.uint64))
+    assert t.records_inserted == n
+    assert t.buffer.size < cfg.buffer_capacity
+    assert t.num_records == n  # fully disjoint input: nothing merged away
+
+
+def test_columnar_entry_points():
+    """The columnar bulk-load surface: flat arrays in, no tuples."""
+    rng = np.random.default_rng(11)
+    lo = rng.integers(0, 10_000, size=300).astype(np.uint64)
+    hi = lo + rng.integers(1, 500, size=300).astype(np.uint64)
+    smin = np.zeros(300, dtype=np.uint64)
+    smax = rng.integers(1, 1000, size=300).astype(np.uint64)
+    d1 = disjointize_arrays(lo, hi, smin, smax)
+    d2 = disjointize(AreaSet.from_arrays(lo, hi, smin, smax))
+    np.testing.assert_array_equal(d1.to_records(), d2.to_records())
+    t = DRTree.from_arrays(d1.lo, d1.hi, d1.smin, d1.smax)
+    keys = rng.integers(0, 11_000, size=200).astype(np.uint64)
+    seqs = rng.integers(0, 1100, size=200).astype(np.uint64)
+    np.testing.assert_array_equal(
+        t.query_batch(keys, seqs), d1.covers_batch_bruteforce(keys, seqs))
+    with pytest.raises(AssertionError):  # non-canonical arrays rejected
+        DRTree.from_arrays(lo, hi, smin, smax)
+
+
+def test_probe_view_reused_across_probes():
+    """The disjointized view is built lazily and reused until the next
+    append invalidates it (amortization contract)."""
+    buf = StagingBuffer()
+    buf.insert_batch(np.array([0, 100], np.uint64),
+                     np.array([50, 200], np.uint64),
+                     np.array([0, 0], np.uint64),
+                     np.array([10, 20], np.uint64))
+    v1 = buf.view
+    assert buf.view is v1  # no rebuild without appends
+    assert buf.covers(0, 5) and not buf.covers(60, 5)
+    buf.insert(300, 400, 0, 30)
+    v2 = buf.view
+    assert v2 is not v1
+    assert len(v2) == 3
+
+
+def test_memory_bytes_counts_records_and_view():
+    """GloranIndex accounting: resident raw records plus the disjoint
+    probe view, all four key-sized fields each (paper model)."""
+    cfg = GloranConfig(index=LSMDRTreeConfig(buffer_capacity=1024,
+                                             key_size=16),
+                       use_eve=False)
+    g = GloranIndex(cfg)
+    for seq in range(1, 101):
+        g.range_delete(seq * 10, seq * 10 + 5, seq)
+    assert g.index.buffer.size == 100
+    # No probes yet: the lazy view is empty, only raw records resident.
+    assert g.memory_bytes == 100 * 4 * cfg.index.key_size
+    assert g.is_deleted(12, 0)  # forces the view build
+    view_n = len(g.index.buffer.view)
+    assert view_n == 100  # disjoint inserts: view == records
+    assert g.memory_bytes == (100 + view_n) * 4 * cfg.index.key_size
+
+
+def test_engine_stats_expose_staging_occupancy():
+    from repro.engine import Engine, EngineConfig
+    from repro.lsm import LSMConfig
+    eng = Engine(num_shards=2, strategy="gloran",
+                 lsm_config=LSMConfig(buffer_capacity=4096,
+                                      key_universe=1 << 20),
+                 config=EngineConfig(partition="range"))
+    eng.range_delete_batch([(i * 100, i * 100 + 50) for i in range(40)])
+    snap = eng.stats()["engine"]["staging_buffer"]
+    assert snap["records"] == 40
+    assert snap["capacity"] > 0
+    assert 0 < snap["occupancy"] <= 1
+    assert len(snap["per_shard"]) == 2
+    assert sum(d["records"] for d in snap["per_shard"]) == 40
