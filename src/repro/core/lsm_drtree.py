@@ -52,6 +52,11 @@ class LSMDRTree:
         self.buffer = StagingBuffer(self.config.buffer_capacity)
         self.levels: list[DRTree | None] = []
         self.records_inserted = 0
+        # Monotonic level-structure version: bumped whenever the on-disk
+        # level set changes (flush, compaction cascade, GC), so device-
+        # resident packed views of the levels can invalidate by epoch
+        # instead of re-hashing level identities every probe.
+        self.epoch = 0
 
     # ------------------------------------------------------------ helpers
     def _level_capacity(self, i: int) -> int:
@@ -106,6 +111,7 @@ class LSMDRTree:
         self.io.write_sequential(len(areas) * 2 * self.config.key_size,
                                  tag="index_flush")
         self._push(0, tree)
+        self.epoch += 1
 
     def _push(self, i: int, tree: DRTree) -> None:
         while len(self.levels) <= i:
@@ -157,6 +163,36 @@ class LSMDRTree:
                                                 io=self.io)
         return out
 
+    def covers_batch_cov(self, keys: np.ndarray, seqs: np.ndarray,
+                         level_cov: np.ndarray) -> np.ndarray:
+        """Batched point stabbing from precomputed per-level verdicts.
+
+        ``level_cov`` is (n, G) bool — column g answers "does the g-th
+        non-None level cover (key, seq)" (the fused cascade kernel's
+        output, bit-exact with ``DRTree.query_batch``).  This replays
+        ``covers_batch``'s control flow — in-memory buffer first, then
+        levels newest->oldest with covered keys early-exiting — so the
+        per-level probe I/O charges are identical; only the verdict
+        computation moved to the device.
+        """
+        keys = np.asarray(keys, dtype=np.uint64)
+        seqs = np.asarray(seqs, dtype=np.uint64)
+        out = np.zeros(len(keys), dtype=bool)
+        if self.buffer.size:
+            out |= self.buffer.covers_batch(keys, seqs)
+        col = 0
+        for lvl in self.levels:
+            if lvl is not None:
+                todo = ~out
+                if not todo.any():
+                    break
+                assert col < level_cov.shape[1], "stale cascade view"
+                self.io.read_blocks(lvl.probe_cost() * int(todo.sum()),
+                                    tag="drtree_probe")
+                out[todo] = level_cov[todo, col]
+                col += 1
+        return out
+
     def probe_cost(self) -> int:
         """Worst-case I/Os for one point probe (Lemma 4.4 / Eq. 2)."""
         return sum(l.probe_cost() for l in self.levels if l is not None)
@@ -177,6 +213,7 @@ class LSMDRTree:
                 self.io.write_sequential(
                     len(newlvl) * 2 * self.config.key_size, tag="index_gc")
                 self.levels[i] = newlvl
+                self.epoch += 1
                 return before - len(newlvl)
         return 0
 

@@ -26,12 +26,14 @@ from .pending import PendingBatch
 from .plan import (KIND_CODES, KIND_NAMES, OP_DELETE, OP_GET, OP_PUT,
                    OP_RANGE_DELETE, OP_RANGE_SCAN, OpBatch, Plan, Planner,
                    PlanStep, ShardPlan)
+from .registry import CascadeView, DeviceFilterRegistry
 from .router import ShardRouter
 from .stats import EngineStats, KernelCounters, merge_io_snapshots
 
 __all__ = ["BlockCache", "Engine", "EngineConfig", "ShardExecutor",
            "ShardRouter", "EngineStats", "KernelCounters",
            "merge_io_snapshots", "OpBatch", "Plan", "Planner", "PlanStep",
-           "ShardPlan", "PendingBatch", "KIND_CODES", "KIND_NAMES",
+           "ShardPlan", "PendingBatch", "CascadeView",
+           "DeviceFilterRegistry", "KIND_CODES", "KIND_NAMES",
            "OP_PUT", "OP_DELETE", "OP_GET", "OP_RANGE_DELETE",
            "OP_RANGE_SCAN"]

@@ -285,7 +285,11 @@ class Engine:
             sum(sh.kernels.bloom_calls for sh in self.shards),
             sum(sh.kernels.bloom_queries for sh in self.shards),
             sum(sh.kernels.merge_calls for sh in self.shards),
-            sum(sh.kernels.merge_keys for sh in self.shards))
+            sum(sh.kernels.merge_keys for sh in self.shards),
+            sum(sh.kernels.cascade_calls for sh in self.shards),
+            sum(sh.kernels.cascade_queries for sh in self.shards),
+            sum(sh.kernels.cascade_packs for sh in self.shards),
+            sum(sh.kernels.upload_bytes for sh in self.shards))
 
     def cache_snapshot(self) -> dict:
         snaps = [sh.cache.snapshot() for sh in self.shards]

@@ -1,8 +1,17 @@
 """Per-shard batched execution with the fused Pallas filter stage.
 
 ``ShardExecutor`` owns one ``LSMTree`` and drives its canonical batched
-read path (``LSMTree.get_batch``) with three hooks swapped in:
+read path (``LSMTree.get_batch``) with four hooks swapped in:
 
+  cascade_fn   THE preferred read path: one fused launch of the
+               ``repro.kernels.cascade`` kernel answers every level's
+               Bloom + fence questions and the GLORAN per-level interval
+               verdicts from persistent device state (the shard's
+               ``DeviceFilterRegistry`` — uploaded once per SSTable /
+               index epoch, invalidated on compaction).  Gated by
+               ``kernel_min_batch`` and u32 eligibility; when it
+               declines, the per-level hooks below serve the lookup
+               instead, with identical results and I/O charges,
   bloom_fn     SSTable filter probes through the ``repro.kernels.bloom``
                Pallas kernel (bit-exact with ``BloomBits.might_contain``)
                once the sub-batch and filter are big enough to pay for a
@@ -41,14 +50,17 @@ import numpy as np
 
 from ..core.eve import fold64to32
 from ..kernels.bloom.ops import bloom_probe
+from ..kernels.cascade.ops import cascade_lookup
 from ..kernels.interval.ops import interval_query
 from ..kernels.merge.ops import merge_ranks
-from ..lsm.tree import LSMTree
+from ..lsm.tree import CascadeVerdict, LSMTree
 from .cache import BlockCache
 from .plan import OP_DELETE, OP_GET, OP_PUT, OP_RANGE_SCAN, ShardPlan
+# _U32_LIMIT / _next_pow2 are shared with the registry: both kernel
+# paths must gate and pad identically for cascade parity to hold.
+from .registry import DeviceFilterRegistry, _next_pow2, _U32_LIMIT
 from .stats import KernelCounters
 
-_U32_LIMIT = 0xFFFFFFFF  # strict upper bound for kernel-eligible values
 _QUERY_TILE = 1024  # block_rows(8) x LANES(128): one grid row
 
 
@@ -62,15 +74,13 @@ class EngineConfig:
     use_bloom_kernel: bool = True
     use_interval_kernel: bool = True
     use_merge_kernel: bool = True
+    use_cascade_kernel: bool = True  # fused all-levels lookup cascade
+    cascade_compiled: bool | None = None  # None = auto (non-TPU -> XLA)
     kernel_min_batch: int = 256  # sub-batch size worth a kernel launch
     kernel_min_areas: int = 64  # DR-tree level size worth a launch
     kernel_min_filter: int = 512  # SSTable entries worth a launch
     kernel_min_merge: int = 1024  # total keys in a 2-way merge round
     interpret: bool | None = None  # None = auto (non-TPU -> interpret)
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, int(n) - 1).bit_length() if n > 1 else 1
 
 
 class ShardExecutor:
@@ -79,9 +89,10 @@ class ShardExecutor:
         self.config = config or EngineConfig()
         self.cache = BlockCache(self.config.cache_blocks)
         self.kernels = KernelCounters()
-        # Padded u32 views of immutable DR-tree levels, keyed by id() with
-        # the level object pinned so a recycled id can never alias.
-        self._u32_levels: dict[int, tuple[object, tuple]] = {}
+        # Device-resident packed filter state for the fused cascade AND
+        # the per-level kernel fallback (per-SSTable pieces + GLORAN
+        # interval views, structurally invalidated).
+        self.registry = DeviceFilterRegistry(self.kernels)
 
     # ----------------------------------------------------------- writes
     def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
@@ -153,12 +164,49 @@ class ShardExecutor:
         return None
 
     def get_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Batched point lookups; (found, vals), order = request order."""
+        """Batched point lookups; (found, vals), order = request order.
+
+        The fused cascade hook answers the whole filter stack in one
+        launch when its gates admit the batch; the per-level bloom /
+        interval hooks are the ungated fallback for the same call."""
         return self.tree.get_batch(
             np.asarray(keys, dtype=np.uint64),
             cache=self.cache if self.cache.enabled else None,
             bloom_fn=self._bloom_maybe,
-            validity_fn=self._validity_fn())
+            validity_fn=self._validity_fn(),
+            cascade_fn=self._cascade)
+
+    # --------------------------------------------------- cascade kernel
+    def _cascade(self, keys: np.ndarray, resolved: np.ndarray,
+                 seqs: np.ndarray) -> CascadeVerdict | None:
+        """One fused launch for a lookup batch, or None to decline.
+
+        Gates: the batch must be worth a launch (``kernel_min_batch``),
+        the tree's packed view must exist (non-empty levels, u32-exact
+        keys/seqs, within the VMEM pack budgets — see
+        ``DeviceFilterRegistry``), and the query keys plus any
+        memtable-resolved seqs must fit u32 working space.  A declined
+        launch falls back to the per-level path with identical results.
+        """
+        cfg = self.config
+        if not cfg.use_cascade_kernel or len(keys) < cfg.kernel_min_batch:
+            return None
+        view = self.registry.view(self.tree)
+        if view is None:
+            return None
+        if int(keys.max()) >= _U32_LIMIT:
+            return None
+        if resolved.any() and int(seqs[resolved].max()) >= _U32_LIMIT:
+            return None
+        maybe, hit, gl_cov, pos = cascade_lookup(
+            keys.astype(np.uint32), fold64to32(keys),
+            seqs.astype(np.uint32), resolved, view.state,
+            interpret=cfg.interpret, compiled=cfg.cascade_compiled)
+        self.kernels.cascade_calls += 1
+        self.kernels.cascade_queries += len(keys)
+        return CascadeVerdict(slots=view.slots, maybe=maybe, hit=hit,
+                              pos=pos,
+                              gl_cov=gl_cov if view.has_gloran else None)
 
     def range_scan(self, lo: int, hi: int):
         """One range scan; (keys, vals) of the live entries in [lo, hi)."""
@@ -203,7 +251,11 @@ class ShardExecutor:
 
     # --------------------------------------------------- filter kernels
     def _bloom_maybe(self, lvl, keys: np.ndarray) -> np.ndarray:
-        """SSTable filter verdicts; Pallas-launched when worth it."""
+        """SSTable filter verdicts; Pallas-launched when worth it.
+
+        Filter words go to the kernel as the registry's device-resident
+        copy (uploaded once per run uid), so the ungated per-level path
+        stops re-uploading the filter on every probe."""
         cfg = self.config
         bb = lvl.bloom
         if (cfg.use_bloom_kernel and len(keys) >= cfg.kernel_min_batch
@@ -213,7 +265,7 @@ class ShardExecutor:
             k32 = np.zeros(m, dtype=np.uint32)
             k32[:n] = fold64to32(keys)
             out = np.asarray(bloom_probe(
-                k32, bb.words, m_bits=bb.m_bits,
+                k32, self.registry.bloom_words(lvl), m_bits=bb.m_bits,
                 seeds=tuple(int(s) for s in bb.seeds),
                 interpret=cfg.interpret))
             self.kernels.bloom_calls += 1
@@ -251,44 +303,12 @@ class ShardExecutor:
         return out[:n]
 
     def _level_u32(self, lvl):
-        """Clamped, padded u32 view of an immutable DR-tree level.
-
-        Exact for queries with key, seq < 2^32 - 1: areas that cannot
-        cover such queries (lo or smin past u32) are dropped, hi/smax are
-        clamped to the u32 ceiling (coverage for in-range queries is
-        unchanged), and the arrays are padded to a power of two with
-        never-covering sentinels (lo = hi) so compiled kernel shapes stay
-        O(log n) distinct across compactions.
-        """
-        ent = self._u32_levels.get(id(lvl))
-        if ent is not None and ent[0] is lvl:
-            return ent[1]
-        # Before admitting a new level, evict views of compacted-away
-        # levels so stale copies (and the levels they pin) don't linger.
+        """Clamped, padded u32 view of an immutable DR-tree level —
+        the registry's device-resident piece (``clamp_level_u32``, the
+        single source of the u32 transform), shared with the cascade's
+        packed GLORAN view: one upload and one device copy serve both
+        kernel paths, and the interval ops layer passes the pre-uploaded
+        ``jax.Array`` columns through untouched."""
         live = [l for l in getattr(self.tree.gloran.index, "levels", [])
                 if l is not None]
-        self._u32_levels = {
-            k: (obj, arrs) for k, (obj, arrs) in self._u32_levels.items()
-            if any(obj is l for l in live)}
-        a = lvl.areas
-        ceil = np.uint64(_U32_LIMIT)
-        keep = (a.lo < ceil) & (a.smin < ceil)
-        lo = a.lo[keep]
-        hi = np.minimum(a.hi[keep], ceil)
-        smin = a.smin[keep]
-        smax = np.minimum(a.smax[keep], ceil)
-        n = len(lo)
-        m = max(64, _next_pow2(n))
-        pad = m - n
-        arrs = (
-            np.concatenate([lo.astype(np.uint32),
-                            np.full(pad, _U32_LIMIT, np.uint32)]),
-            np.concatenate([hi.astype(np.uint32),
-                            np.full(pad, _U32_LIMIT, np.uint32)]),
-            np.concatenate([smin.astype(np.uint32),
-                            np.zeros(pad, np.uint32)]),
-            np.concatenate([smax.astype(np.uint32),
-                            np.zeros(pad, np.uint32)]),
-        )
-        self._u32_levels[id(lvl)] = (lvl, arrs)
-        return arrs
+        return self.registry.gl_columns(lvl, live)

@@ -21,6 +21,10 @@ class KernelCounters:
     bloom_queries: int = 0      # filter verdicts produced by them
     merge_calls: int = 0        # merge_ranks launches (scan merge rounds)
     merge_keys: int = 0         # keys positioned by them
+    cascade_calls: int = 0      # fused lookup-cascade launches
+    cascade_queries: int = 0    # lookups answered by the cascade
+    cascade_packs: int = 0      # registry device-state (re)packs
+    upload_bytes: int = 0       # host->device bytes moved by the packs
 
     def snapshot(self) -> dict:
         return {
@@ -30,6 +34,10 @@ class KernelCounters:
             "bloom_queries": self.bloom_queries,
             "merge_calls": self.merge_calls,
             "merge_keys": self.merge_keys,
+            "cascade_calls": self.cascade_calls,
+            "cascade_queries": self.cascade_queries,
+            "cascade_packs": self.cascade_packs,
+            "upload_bytes": self.upload_bytes,
         }
 
 

@@ -7,15 +7,18 @@ validated in interpret mode against the oracle across shape/dtype sweeps.
   bloom            batched Bloom-filter probe (SSTable filters, RAE/EVE)
   interval         batched point-stab query over disjoint DR-tree levels
   merge            tournament merge-rank over sorted runs (scan merge-back)
+  cascade          fused all-levels bloom + fence + GLORAN lookup cascade
   flash_attention  blocked causal/windowed GQA attention (serving prefill)
   ssd              Mamba2 state-space-duality chunked scan
 """
 
 from .bloom.ops import bloom_probe
+from .cascade.ops import CascadeState, cascade_lookup
 from .interval.ops import interval_query
 from .merge.ops import merge_ranks
 from .flash_attention.ops import flash_attention
 from .ssd.ops import ssd_chunked_scan
 
 __all__ = ["bloom_probe", "interval_query", "merge_ranks",
+           "CascadeState", "cascade_lookup",
            "flash_attention", "ssd_chunked_scan"]

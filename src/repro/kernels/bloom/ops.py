@@ -37,7 +37,10 @@ def bloom_probe(keys32, words, *, m_bits: int, seeds: tuple[int, ...],
     if interpret is None:
         interpret = _default_interpret()
     keys32 = jnp.asarray(keys32, dtype=jnp.uint32)
-    words = jnp.asarray(words, dtype=jnp.uint32)
+    # Pre-uploaded device words (e.g. the engine registry's per-run
+    # copies) pass through untouched: no host->device copy per probe.
+    if not isinstance(words, jax.Array):
+        words = jnp.asarray(words, dtype=jnp.uint32)
     n = keys32.shape[0]
     tile = block_rows * LANES
     n_pad = -n % tile

@@ -1,0 +1,8 @@
+"""Fused device-resident lookup cascade: one launch for every level's
+Bloom + fence + GLORAN interval filters (see kernel.py for design)."""
+
+from .ops import (CascadeState, MAX_PACK_AREAS, MAX_PACK_KEYS,
+                  MAX_PACK_WORDS, cascade_lookup)
+
+__all__ = ["CascadeState", "cascade_lookup", "MAX_PACK_KEYS",
+           "MAX_PACK_WORDS", "MAX_PACK_AREAS"]

@@ -1,0 +1,161 @@
+"""Pallas kernel: the fused device-resident lookup cascade.
+
+One launch answers, for a tile of point-lookup keys, every read-path
+filter question the LSM host loop would otherwise ask level by level:
+
+  * per SSTable level — Bloom verdict (same 32-bit mixing as
+    ``core.eve.BloomBits``) against the level's word segment of one
+    packed VMEM-resident word array, plus the fence/candidate position
+    ``min(searchsorted(keys_l, q), n_l - 1)`` via a fixed-depth binary
+    search over the packed key array (this is the exact index whose
+    block the host charges and reads);
+  * resolution — the first level whose candidate is an exact key match
+    supplies the entry's sequence number (query-stream inputs carry
+    memtable-resolved seqs so earlier stages keep priority);
+  * per GLORAN DR-tree level — the disjoint-interval point-stab verdict
+    of (key, resolved seq), the same rectangle test as
+    ``kernels.interval``.
+
+The grid walks (key tiles); levels are unrolled statically inside the
+body because resolution order is a cross-level carry (level l+1's
+resolved seq depends on level l's hit).  All per-level metadata
+(offsets, counts, m_bits, seeds) is dynamic input, so compiled shapes
+are keyed only on the padded pack sizes — O(log) distinct across
+compactions, exactly like the interval kernel's pow2 padding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _mix32(x: jnp.ndarray, seed) -> jnp.ndarray:
+    """murmur3-style finalizer on uint32 (matches core.eve.mix32)."""
+    x = x.astype(jnp.uint32) ^ seed.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _search(keys, arr, off, cnt, steps: int, leq: bool):
+    """Fixed-depth lower/upper-bound over ``arr[off:off+cnt]`` (global
+    converged left bound; data-independent iteration count)."""
+    left = jnp.full(keys.shape, off, dtype=jnp.int32)
+    right = jnp.full(keys.shape, off + cnt, dtype=jnp.int32)
+    for _ in range(steps):
+        active = left < right
+        mid = (left + right) // 2
+        midc = jnp.clip(mid, 0, arr.shape[0] - 1)
+        v = jnp.take(arr, midc, axis=0)
+        go_right = (v <= keys) if leq else (v < keys)
+        left = jnp.where(active & go_right, mid + 1, left)
+        right = jnp.where(active & ~go_right, mid, right)
+    return left
+
+
+def _cascade_kernel(qkey_ref, qhash_ref, qseq_ref, qres_ref,
+                    lkeys_ref, lseqs_ref, key_off_ref, key_cnt_ref,
+                    words_ref, word_off_ref, mbits_ref, seeds_ref,
+                    glo_lo_ref, glo_hi_ref, glo_smin_ref, glo_smax_ref,
+                    gl_off_ref, gl_cnt_ref,
+                    bloom_ref, hit_ref, gl_ref, pos_ref, *,
+                    L: int, H: int, G: int, steps_keys: int, steps_gl: int):
+    qkey = qkey_ref[...]  # (rows, LANES) uint32 exact keys
+    qhash = qhash_ref[...]  # folded-64to32 bloom inputs
+    resolved = qres_ref[...] != 0
+    res_seq = qseq_ref[...]
+    lkeys = lkeys_ref[...].reshape(-1)
+    lseqs = lseqs_ref[...].reshape(-1)
+    words = words_ref[...].reshape(-1)
+    zero = jnp.zeros(qkey.shape, jnp.int32)
+    bloom_mask, hit_mask, gl_mask = zero, zero, zero
+    for l in range(L):  # level count is small + static: unrolled
+        off = key_off_ref[l]
+        cnt = key_cnt_ref[l]
+        left = _search(qkey, lkeys, off, cnt, steps_keys, leq=False)
+        idxc = jnp.minimum(left - off, cnt - 1)
+        pos_ref[l, :, :] = idxc
+        maybe = jnp.ones(qkey.shape, jnp.bool_)
+        for h in range(H):
+            p = _mix32(qhash, seeds_ref[l, h]) % mbits_ref[l]
+            w = jnp.take(words, word_off_ref[l]
+                         + (p >> jnp.uint32(5)).astype(jnp.int32), axis=0)
+            maybe = maybe & (((w >> (p & jnp.uint32(31)))
+                              & jnp.uint32(1)) == jnp.uint32(1))
+        hit = maybe & (jnp.take(lkeys, off + idxc, axis=0) == qkey)
+        bloom_mask = bloom_mask | jnp.where(maybe, jnp.int32(1 << l), 0)
+        hit_mask = hit_mask | jnp.where(hit, jnp.int32(1 << l), 0)
+        newly = hit & ~resolved
+        res_seq = jnp.where(newly, jnp.take(lseqs, off + idxc, axis=0),
+                            res_seq)
+        resolved = resolved | hit
+    if G:
+        glo_lo = glo_lo_ref[...].reshape(-1)
+        glo_hi = glo_hi_ref[...].reshape(-1)
+        glo_smin = glo_smin_ref[...].reshape(-1)
+        glo_smax = glo_smax_ref[...].reshape(-1)
+        for g in range(G):
+            off = gl_off_ref[g]
+            cnt = gl_cnt_ref[g]
+            left = _search(qkey, glo_lo, off, cnt, steps_gl, leq=True)
+            i = left - off - 1
+            ic = jnp.maximum(i, 0)
+            cov = ((i >= 0) & (cnt > 0)
+                   & (qkey < jnp.take(glo_hi, off + ic, axis=0))
+                   & (jnp.take(glo_smin, off + ic, axis=0) <= res_seq)
+                   & (res_seq < jnp.take(glo_smax, off + ic, axis=0)))
+            gl_mask = gl_mask | jnp.where(cov, jnp.int32(1 << g), 0)
+    bloom_ref[...] = bloom_mask
+    hit_ref[...] = hit_mask
+    gl_ref[...] = gl_mask
+
+
+@functools.partial(jax.jit, static_argnames=("L", "H", "G", "steps_keys",
+                                             "steps_gl", "block_rows",
+                                             "interpret"))
+def cascade_pallas(qkey, qhash, qseq, qres,
+                   lkeys, lseqs, key_off, key_cnt, words, word_off, mbits,
+                   seeds, glo_lo, glo_hi, glo_smin, glo_smax, gl_off,
+                   gl_cnt, *, L: int, H: int, G: int, steps_keys: int,
+                   steps_gl: int, block_rows: int = 8,
+                   interpret: bool = True):
+    """Query tiles: (rows, 128) uint32/int32; packed state: flat arrays.
+
+    Returns (bloom_mask, hit_mask, gl_mask) int32 (rows, 128) bitmasks
+    and pos int32 (L, rows, 128) level-local candidate indices."""
+    rows = qkey.shape[0]
+    assert qkey.shape[1] == LANES and rows % block_rows == 0
+    assert 1 <= L <= 30 and 0 <= G <= 30
+    grid = (rows // block_rows,)
+    tile = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    full = lambda arr: pl.BlockSpec(arr.shape, lambda i: (0,) * arr.ndim)
+    kern = functools.partial(_cascade_kernel, L=L, H=H, G=G,
+                             steps_keys=steps_keys, steps_gl=steps_gl)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile,
+                  full(lkeys), full(lseqs), full(key_off), full(key_cnt),
+                  full(words), full(word_off), full(mbits), full(seeds),
+                  full(glo_lo), full(glo_hi), full(glo_smin),
+                  full(glo_smax), full(gl_off), full(gl_cnt)],
+        out_specs=[tile, tile, tile,
+                   pl.BlockSpec((L, block_rows, LANES),
+                                lambda i: (0, i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((L, rows, LANES), jnp.int32)],
+        interpret=interpret,
+    )(qkey, qhash, qseq, qres, lkeys, lseqs, key_off, key_cnt, words,
+      word_off, mbits, seeds, glo_lo, glo_hi, glo_smin, glo_smax, gl_off,
+      gl_cnt)

@@ -27,10 +27,14 @@ def interval_query(keys32, seqs32, lo, hi, smin, smax, *,
         interpret = _default_interpret()
     keys32 = jnp.asarray(keys32, jnp.uint32)
     seqs32 = jnp.asarray(seqs32, jnp.uint32)
-    lo = jnp.asarray(lo, jnp.uint32)
-    hi = jnp.asarray(hi, jnp.uint32)
-    smin = jnp.asarray(smin, jnp.uint32)
-    smax = jnp.asarray(smax, jnp.uint32)
+    # Pre-uploaded device columns (the executor's cached u32 level
+    # views) pass through untouched: no host->device copy per probe.
+    as_dev = lambda a: a if isinstance(a, jax.Array) else \
+        jnp.asarray(a, jnp.uint32)
+    lo = as_dev(lo)
+    hi = as_dev(hi)
+    smin = as_dev(smin)
+    smax = as_dev(smax)
 
     n = keys32.shape[0]
     tile = block_rows * LANES

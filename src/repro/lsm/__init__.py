@@ -2,7 +2,7 @@
 
 from .format import LSMConfig, PUT, TOMBSTONE
 from .sstable import RangeTombstoneBlock, SSTable, build_sstable
-from .tree import LSMTree, STRATEGIES
+from .tree import CascadeVerdict, LSMTree, STRATEGIES
 
 __all__ = ["LSMConfig", "PUT", "TOMBSTONE", "RangeTombstoneBlock", "SSTable",
-           "build_sstable", "LSMTree", "STRATEGIES"]
+           "build_sstable", "CascadeVerdict", "LSMTree", "STRATEGIES"]

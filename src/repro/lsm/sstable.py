@@ -52,6 +52,12 @@ class SSTable:
     def nbytes(self) -> int:
         return len(self.keys) * self.config.entry_size
 
+    @property
+    def max_key(self) -> int:
+        """Largest key in the run (0 when empty) — the u32-eligibility
+        gate for device-resident packed views of this run."""
+        return int(self.keys[-1]) if len(self.keys) else 0
+
     def data_blocks(self) -> int:
         return math.ceil(len(self.keys) / self.config.entries_per_block)
 
@@ -92,13 +98,7 @@ class SSTable:
             maybe = self.bloom.might_contain(keys)
         idx = np.searchsorted(self.keys, keys[maybe])
         idxc = np.minimum(idx, len(self.keys) - 1)
-        if io is not None:
-            if cache is not None:
-                blocks = idxc // self.config.entries_per_block
-                hits = cache.probe_many(self.uid, blocks)
-                io.read_blocks(int((~hits).sum()), tag="data_block")
-            else:
-                io.read_blocks(int(maybe.sum()), tag="data_block")
+        self.charge_probe(idxc, io, cache=cache)
         hit = self.keys[idxc] == keys[maybe]
         sub = np.flatnonzero(maybe)[hit]
         found[sub] = True
@@ -106,6 +106,32 @@ class SSTable:
         types[sub] = self.types[idxc[hit]]
         vals[sub] = self.vals[idxc[hit]]
         return found, seqs, types, vals
+
+    def charge_probe(self, pos: np.ndarray, io: IOStats | None = None, *,
+                     cache=None) -> None:
+        """Charge the data-block reads of filter-passing point probes.
+
+        ``pos`` holds the candidate entry index of every probe that
+        passed this run's Bloom filter (the fence-pointer search result,
+        e.g. the fused cascade kernel's per-level output) — exactly the
+        indices ``get_batch`` derives before charging, so the charges
+        are identical: one block per probe, or only cache-missed blocks
+        when a read-through ``cache`` absorbs them.
+        """
+        if io is None or len(pos) == 0:
+            return
+        if cache is not None:
+            blocks = pos // self.config.entries_per_block
+            hits = cache.probe_many(self.uid, blocks)
+            io.read_blocks(int((~hits).sum()), tag="data_block")
+        else:
+            io.read_blocks(len(pos), tag="data_block")
+
+    def rows_at(self, pos: np.ndarray):
+        """Gather (seqs, types, vals) at known entry positions — the
+        data-block payload step of a mask-driven lookup, after
+        ``charge_probe`` paid for the reads."""
+        return self.seqs[pos], self.types[pos], self.vals[pos]
 
     def range_slice(self, lo: int, hi: int, io: IOStats | None = None):
         """Entries with lo <= key < hi; charges sequential block reads."""

@@ -17,6 +17,9 @@ cost model; benchmarks report those counts alongside wall time.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+from itertools import repeat
+
 import numpy as np
 
 from ..core.gloran import GloranConfig, GloranIndex
@@ -28,6 +31,28 @@ from .sstable import RangeTombstoneBlock, SSTable, build_sstable
 STRATEGIES = ("decomp", "lookup_delete", "scan_delete", "lrr", "gloran")
 
 
+@dataclass
+class CascadeVerdict:
+    """One fused-launch answer to a lookup batch's filter questions.
+
+    Produced by an execution layer's ``cascade_fn`` hook (the engine's
+    device-resident cascade kernel) and consumed by ``get_batch``'s
+    mask-driven level loop: per packed level, Bloom verdicts, exact-key
+    hits, and the candidate entry position whose block a surviving probe
+    reads; plus (GLORAN only) per-index-level coverage of (key, resolved
+    seq).  The tree replays its own control flow — unresolved-only
+    probing, first-hit resolution, validity early-exit — around these
+    verdicts, so results and I/O charges are identical to computing each
+    stage on the host.
+    """
+
+    slots: np.ndarray          # tree level index -> packed column (-1 none)
+    maybe: np.ndarray          # (n, L) bool: Bloom pass per packed level
+    hit: np.ndarray            # (n, L) bool: exact key match per level
+    pos: np.ndarray            # (n, L) int64: level-local candidate index
+    gl_cov: np.ndarray | None  # (n, G) bool: GLORAN level coverage
+
+
 class LSMTree:
     def __init__(self, config: LSMConfig | None = None,
                  strategy: str = "gloran",
@@ -37,6 +62,7 @@ class LSMTree:
         self.strategy = strategy
         self.io = IOStats(block_size=self.config.block_size)
         self.mem: dict[int, tuple[int, int, int]] = {}  # key->(seq,type,val)
+        self._mem_snap = None  # cached sorted snapshot; None = stale
         self.mem_rts: list[tuple[int, int, int]] = []  # LRR buffer
         self.levels: list[SSTable | None] = []
         self.level_rts: list[RangeTombstoneBlock] = []
@@ -58,6 +84,7 @@ class LSMTree:
 
     def _mem_put(self, key: int, seq: int, typ: int, val: int) -> None:
         self.mem[int(key)] = (int(seq), int(typ), int(val))
+        self._mem_snap = None
         if len(self.mem) >= self.config.buffer_capacity:
             self.flush()
 
@@ -68,20 +95,45 @@ class LSMTree:
     def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
         keys = np.asarray(keys, dtype=np.uint64)
         vals = np.asarray(vals, dtype=np.uint64)
-        seqs = self._next_seqs(len(keys))
-        for k, s, v in zip(keys.tolist(), seqs.tolist(), vals.tolist()):
-            self.mem[k] = (s, int(PUT), v)
-            if len(self.mem) >= self.config.buffer_capacity:
-                self.flush()
+        self._mem_insert_batch(keys, self._next_seqs(len(keys)),
+                               int(PUT), vals)
 
     def delete(self, key: int) -> None:
         self._mem_put(key, self._next_seq(), int(TOMBSTONE), 0)
 
     def delete_batch(self, keys: np.ndarray) -> None:
         keys = np.asarray(keys, dtype=np.uint64)
-        seqs = self._next_seqs(len(keys))
-        for k, s in zip(keys.tolist(), seqs.tolist()):
-            self.mem[k] = (s, int(TOMBSTONE), 0)
+        self._mem_insert_batch(keys, self._next_seqs(len(keys)),
+                               int(TOMBSTONE), None)
+
+    def _mem_insert_batch(self, keys: np.ndarray, seqs: np.ndarray,
+                          typ: int, vals: np.ndarray | None) -> None:
+        """Bulk memtable absorb, chunked at flush boundaries.
+
+        Each chunk is one ``dict.update`` of at most the remaining
+        buffer room, so the memtable can only reach capacity exactly at
+        a chunk end: within a chunk the entry count grows by at most one
+        per record and starts at least ``room`` below capacity, hence a
+        per-record loop could not have flushed mid-chunk either.  Flush
+        points (and therefore run shapes and I/O) are identical to
+        per-record inserts; later duplicates win inside a chunk exactly
+        as sequential overwrites would.
+        """
+        n = len(keys)
+        kk = keys.tolist()
+        ss = seqs.tolist()
+        vv = vals.tolist() if vals is not None else None
+        self._mem_snap = None
+        at = 0
+        while at < n:
+            room = self.config.buffer_capacity - len(self.mem)
+            take = min(max(room, 1), n - at)
+            end = at + take
+            payload = repeat(0, take) if vv is None else vv[at:end]
+            self.mem.update(zip(kk[at:end],
+                                zip(ss[at:end], repeat(typ, take),
+                                    payload)))
+            at = end
             if len(self.mem) >= self.config.buffer_capacity:
                 self.flush()
 
@@ -179,14 +231,21 @@ class LSMTree:
         return val
 
     def get_batch(self, keys: np.ndarray, *, cache=None, bloom_fn=None,
-                  validity_fn=None):
+                  validity_fn=None, cascade_fn=None):
         """Vectorized point lookups. Returns (found_mask, values).
 
         Optional hooks let an execution layer swap HOW a stage computes
         without forking the read path (``repro.engine`` uses these for
         its Pallas kernels and block cache): ``bloom_fn(sstable, keys)``
         supplies filter verdicts, ``cache`` absorbs data-block charges,
-        ``validity_fn(keys, seqs)`` replaces the GLORAN validity probe.
+        ``validity_fn(keys, seqs)`` replaces the GLORAN validity probe,
+        and ``cascade_fn(keys, resolved, seqs)`` answers EVERY level's
+        filter questions in one fused launch (a ``CascadeVerdict``, or
+        None to decline).  With a cascade verdict the level loop below
+        only charges/reads data blocks for filter survivors — levels
+        with zero survivors are skipped without being touched — and the
+        GLORAN probe replays charging around the fused per-level
+        coverage bits; results and I/O are identical either way.
         """
         keys = np.asarray(keys, dtype=np.uint64)
         n = len(keys)
@@ -201,17 +260,24 @@ class LSMTree:
                 m = (keys >= lo) & (keys < hi)
                 rt_max[m] = np.maximum(rt_max[m], np.uint64(s))
 
-        # Memtable (skipped entirely when empty — the steady post-flush
-        # state of read-mostly serving, where this per-key loop would
-        # otherwise dominate the batched read path).
+        # Memtable: one sorted snapshot + batched binary search (skipped
+        # entirely when empty — the steady post-flush state of
+        # read-mostly serving).
         if self.mem:
-            for j, k in enumerate(keys.tolist()):
-                hit = self.mem.get(k)
-                if hit is not None:
-                    resolved[j] = True
-                    out_found[j] = hit[1] == 0
-                    out_seqs[j] = hit[0]
-                    out_vals[j] = hit[2]
+            mk, ms, mt, mv = self._mem_sorted()
+            j = np.minimum(np.searchsorted(mk, keys), len(mk) - 1)
+            hitm = mk[j] == keys
+            jh = j[hitm]
+            resolved[hitm] = True
+            out_found[hitm] = mt[jh] == PUT
+            out_seqs[hitm] = ms[jh]
+            out_vals[hitm] = mv[jh]
+
+        # One fused launch answers bloom + fence + GLORAN for all
+        # levels; the loop below replays resolution order around it.
+        cas = None
+        if cascade_fn is not None and not resolved.all():
+            cas = cascade_fn(keys, resolved, out_seqs)
 
         for i, lvl in enumerate(self.levels):
             todo = ~resolved
@@ -224,15 +290,29 @@ class LSMTree:
                     self.level_rts[i].probe_batch(keys[todo], self.io))
             if lvl is None or len(lvl) == 0:
                 continue
-            sub = keys[todo]
-            f, s, t, v = lvl.get_batch(
-                sub, self.io, cache=cache,
-                maybe=bloom_fn(lvl, sub) if bloom_fn is not None else None)
-            idx = np.flatnonzero(todo)[f]
+            if cas is not None:
+                sl = int(cas.slots[i])
+                maybe = cas.maybe[todo, sl]
+                if not maybe.any():
+                    continue  # zero survivors: level skipped untouched
+                pos = cas.pos[todo, sl][maybe]
+                lvl.charge_probe(pos, self.io, cache=cache)
+                hitk = cas.hit[todo, sl][maybe]
+                sel = pos[hitk]
+                idx = np.flatnonzero(todo)[np.flatnonzero(maybe)[hitk]]
+                s, t, v = lvl.rows_at(sel)
+            else:
+                sub = keys[todo]
+                f, s, t, v = lvl.get_batch(
+                    sub, self.io, cache=cache,
+                    maybe=bloom_fn(lvl, sub) if bloom_fn is not None
+                    else None)
+                idx = np.flatnonzero(todo)[f]
+                s, t, v = s[f], t[f], v[f]
             resolved[idx] = True
-            out_found[idx] = t[f] == 0
-            out_seqs[idx] = s[f]
-            out_vals[idx] = v[f]
+            out_found[idx] = t == PUT
+            out_seqs[idx] = s
+            out_vals[idx] = v
 
         # Validity filtering.
         if self.strategy == "lrr":
@@ -241,22 +321,33 @@ class LSMTree:
         elif self.strategy == "gloran":
             cand = out_found
             if cand.any():
-                is_dead = validity_fn or self.gloran.is_deleted_batch
-                dead = is_dead(keys[cand], out_seqs[cand])
+                if cas is not None and cas.gl_cov is not None:
+                    dead = self.gloran.is_deleted_batch(
+                        keys[cand], out_seqs[cand],
+                        level_cov=cas.gl_cov[cand])
+                else:
+                    is_dead = validity_fn or self.gloran.is_deleted_batch
+                    dead = is_dead(keys[cand], out_seqs[cand])
                 sub = np.flatnonzero(cand)[dead]
                 out_found[sub] = False
         return out_found, out_vals
 
     def _mem_sorted(self):
-        """Key-sorted snapshot of the memtable as a 4-array run."""
+        """Key-sorted snapshot of the memtable as a 4-array run, cached
+        until the next memtable mutation so read bursts between writes
+        (many lookup/scan batches against one buffered state) pay the
+        O(m log m) sort once, not per batch."""
+        if self._mem_snap is not None:
+            return self._mem_snap
         m = len(self.mem)
         if m == 0:
             return empty_run()
         keys = np.fromiter(self.mem.keys(), np.uint64, m)
         rows = np.array(list(self.mem.values()), dtype=np.uint64)
         order = np.argsort(keys)
-        return (keys[order], rows[order, 0],
-                rows[order, 1].astype(np.uint8), rows[order, 2])
+        self._mem_snap = (keys[order], rows[order, 0],
+                          rows[order, 1].astype(np.uint8), rows[order, 2])
+        return self._mem_snap
 
     def range_scan(self, lo: int, hi: int, *, validity_fn=None,
                    cache=None, rank_fn=None):
@@ -356,6 +447,7 @@ class LSMTree:
                               for k, (s, t, v) in self.mem.items()],
                              dtype=np.uint64)
             self.mem.clear()
+            self._mem_snap = None
             self._sstable_seed += 1
             run = build_sstable(items[:, 0], items[:, 1],
                                 items[:, 2].astype(np.uint8), items[:, 3],

@@ -186,11 +186,14 @@ class TestBlockCache:
 class TestKernelPath:
     def test_interval_and_bloom_kernels_are_hit(self):
         """Batched lookups on a DR-tree level execute through the Pallas
-        interval kernel (and SSTable filters through the bloom kernel)."""
+        interval kernel (and SSTable filters through the bloom kernel).
+        The fused cascade (which supersedes both with one launch, see
+        tests/test_cascade.py) is pinned off: this covers the per-level
+        fallback path."""
         eng = Engine(num_shards=2, strategy="gloran",
                      lsm_config=small_cfg(),
                      gloran_config=small_gloran(index_buffer=8),
-                     config=kernel_cfg())
+                     config=kernel_cfg(use_cascade_kernel=False))
         rng = np.random.default_rng(3)
         model = Model()
         drive(eng, model, make_ops(rng, 1500, rdel_ratio=0.15))
