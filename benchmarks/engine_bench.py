@@ -118,6 +118,7 @@ def bench_engine(eng: Engine, keys: np.ndarray, batch: int,
     rounds = ROUNDS if rounds is None else rounds
     probes = probe_batches(keys, batch, rounds, seed=99)
     eng.get_batch(probes[0])  # warm caches + jit
+    eng.reset_stats()  # per-measurement latency window (counters cumulate)
     r0, k0 = eng.io_reads, eng.kernel_counters
     c0 = eng.cache_snapshot()
     t0 = time.perf_counter()
@@ -134,7 +135,11 @@ def bench_engine(eng: Engine, keys: np.ndarray, batch: int,
     launches = ((k1.cascade_calls - k0.cascade_calls)
                 + (k1.bloom_calls - k0.bloom_calls)
                 + (k1.interval_calls - k0.interval_calls))
+    hist = eng.stats_.latency.get("get")
+    lat = hist.snapshot() if hist is not None else {}
     return {
+        "latency_us": {q: lat.get(q)
+                       for q in ("p50_us", "p95_us", "p99_us")},
         "ops_per_sec": n / dt,
         "io_reads_per_lookup": (eng.io_reads - r0) / n,
         "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
@@ -264,6 +269,7 @@ def run() -> dict:
                     "interval_kernel_queries": m["interval_kernel_queries"],
                     "bloom_kernel_calls": m["bloom_kernel_calls"],
                     "cascade_kernel_calls": m["cascade_kernel_calls"],
+                    "get_batch_latency_us": m["latency_us"],
                 }
                 rows.append(row)
                 print(f"# engine x{shards} batch={batch} ratio={ratio} "

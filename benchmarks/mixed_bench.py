@@ -14,6 +14,11 @@ Env:
     REPRO_MIXED_BENCH_SMOKE=1   ~20 s subset (scripts/check.sh)
     REPRO_BENCH_SCALE=full      ~4x workload
     REPRO_BENCH_OUT=path.json   output path (default BENCH_mixed.json)
+    REPRO_TRACE_OUT=trace.json  also run one traced 4-shard pipelined
+                                pass and export it as Chrome trace-event
+                                JSON (load in Perfetto / chrome://tracing)
+    REPRO_TRACE_ONLY=1          skip the benchmark sweeps, only export
+                                the trace (fast CI artifact mode)
 
 Throughput is reported two ways, extending this repo's existing
 device-grounded convention (``WorkloadResult.modeled_ops_per_sec``:
@@ -67,6 +72,8 @@ from repro.lsm import LSMConfig
 SMOKE = os.environ.get("REPRO_MIXED_BENCH_SMOKE") == "1"
 SCALE = 4 if os.environ.get("REPRO_BENCH_SCALE") == "full" else 1
 OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_mixed.json")
+TRACE_OUT = os.environ.get("REPRO_TRACE_OUT", "")
+TRACE_ONLY = os.environ.get("REPRO_TRACE_ONLY") == "1"
 
 UNIVERSE = 1 << 22
 SCAN_ENTRIES = 256  # target live entries per scan (span = entries/density)
@@ -288,6 +295,15 @@ def bench_cell(mix_name: str, shards: int) -> tuple[dict, dict]:
                                        max(sum(cell_ios), 1), 3),
             "shard_stall_frac": round(stall / max(wall + stall, 1e-12),
                                       3),
+            # Engine-side batch-latency tails per op class (whole engine
+            # lifetime: preload + warm + measured reps) and per-shard
+            # plan-execution p99 — the EngineStats histograms the PR's
+            # observability layer keeps regardless of tracing.
+            "batch_latency_us": {
+                op: {q: h[q] for q in ("p50_us", "p95_us", "p99_us")}
+                for op, h in snap["latency"].items()},
+            "shard_p99_us": {s: h["p99_us"]
+                             for s, h in snap["shard_latency"].items()},
         }
     rows[True]["speedup_vs_serial_modeled"] = round(float(np.median(
         [s / p for s, p in zip(m_serial, m_piped)])), 2)
@@ -352,7 +368,37 @@ def bench_buffer_insert() -> dict:
     return out
 
 
+def export_trace(path: str, shards: int = 4) -> dict:
+    """One traced {shards}-shard pipelined mixed pass -> Chrome trace.
+
+    The exported JSON loads in Perfetto / chrome://tracing: one track
+    per shard worker thread (submit -> plan.compile -> shard.plan ->
+    per-step shard.* -> kernel.* spans, engine.collect on the caller
+    track).  Also prints the ``analysis.report`` trace digest."""
+    from repro import obs
+    from repro.analysis.report import trace_report
+
+    eng = make_engine(shards, True)
+    batches = mixed_batches(MIXES["scan_heavy"], 4, seed=91)
+    eng.submit(batches[0]).wait()  # warm jit outside the trace
+    with obs.enabled() as tr:
+        run_batches(eng, batches[1:])
+        eng.drain()
+        tr.export_chrome(path)
+        rep = trace_report(tr.chrome_events())
+    print(f"# wrote {path}: {len(tr.events())} spans over "
+          f"{len(batches) - 1} batches x{shards} shards; wall "
+          f"{rep['wall_us']:.0f}us, perfect-overlap bound "
+          f"{rep['modeled_us']:.0f}us, stall shares "
+          + " ".join(f"s{s}:{r['stall_share']:.0%}"
+                     for s, r in rep["shards"].items()), flush=True)
+    return rep
+
+
 def run() -> dict:
+    if TRACE_OUT and TRACE_ONLY:
+        export_trace(TRACE_OUT)
+        return {}
     rows = []
     for mix_name in MIX_KEYS:
         for shards in SHARDS:
@@ -412,6 +458,8 @@ def run() -> dict:
                 default=None),
         },
     }
+    if TRACE_OUT:
+        export_trace(TRACE_OUT)
     with open(OUT, "w") as f:
         json.dump(result, f, indent=2)
     print(f"# wrote {OUT}: geomean {max_s}-shard modeled pipeline "

@@ -58,4 +58,26 @@ assert b is not None and b >= 2.0, \
 print(f"check OK: columnar staging buffer inserts {b}x vs R-tree buffer")
 mixes = {r["mix"] for r in d["rows"]}
 assert "rdel_dominant" in mixes, "delete-heavy smoke row missing"
+lat = next(r["batch_latency_us"] for r in d["rows"] if r["pipeline"])
+assert lat and all({"p50_us", "p95_us", "p99_us"} <= set(h)
+                   for h in lat.values()), \
+    "engine.stats latency percentiles missing from mixed-bench rows"
+EOF
+
+REPRO_OBS_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_obs_smoke.json \
+    python benchmarks/obs_overhead.py
+
+python - <<'EOF'
+import json
+d = json.load(open("/tmp/BENCH_obs_smoke.json"))
+a = d["acceptance"]
+off = a["disabled_projected_overhead_frac"]
+assert off <= 0.02, \
+    f"disabled tracer overhead too high: {off:.2%} of batch wall > 2%"
+print(f"check OK: disabled tracer costs {off:.3%} of batch wall "
+      f"({d['spans_per_batch']} spans x {d['null_span_cost_ns']}ns)")
+on = a["enabled_wall_ratio"]
+assert on <= 1.10, \
+    f"enabled tracer overhead too high: {on}x wall ratio > 1.10x"
+print(f"check OK: enabled tracer wall ratio {on}x <= 1.10x")
 EOF

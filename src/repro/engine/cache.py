@@ -21,6 +21,13 @@ class BlockCache:
         self._blocks: OrderedDict[tuple[int, int], None] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        # Per-op-class attribution: the executor tags each probe window
+        # with the op class it serves ("get" vs "range_scan"), so scan
+        # and point-lookup cache behavior stay distinguishable in the
+        # global ledger.
+        self.op_class: str | None = None
+        self.class_hits: dict[str, int] = {}
+        self.class_misses: dict[str, int] = {}
 
     @property
     def enabled(self) -> bool:
@@ -36,8 +43,11 @@ class BlockCache:
         matching what a real cache would do for a sorted probe batch.
         """
         hit = np.zeros(len(blocks), dtype=bool)
+        cls = self.op_class or "other"
         if not self.enabled:
             self.misses += len(blocks)
+            self.class_misses[cls] = \
+                self.class_misses.get(cls, 0) + len(blocks)
             return hit
         for j, b in enumerate(blocks.tolist()):
             key = (run_uid, int(b))
@@ -48,9 +58,23 @@ class BlockCache:
                 self._blocks[key] = None
                 if len(self._blocks) > self.capacity:
                     self._blocks.popitem(last=False)
-        self.hits += int(hit.sum())
-        self.misses += int((~hit).sum())
+        h = int(hit.sum())
+        m = int((~hit).sum())
+        self.hits += h
+        self.misses += m
+        self.class_hits[cls] = self.class_hits.get(cls, 0) + h
+        self.class_misses[cls] = self.class_misses.get(cls, 0) + m
         return hit
+
+    def by_class(self) -> dict:
+        """Per-op-class hit/miss/hit-rate breakdown of the ledger."""
+        out = {}
+        for cls in sorted(set(self.class_hits) | set(self.class_misses)):
+            h = self.class_hits.get(cls, 0)
+            m = self.class_misses.get(cls, 0)
+            out[cls] = {"hits": h, "misses": m,
+                        "hit_rate": h / (h + m) if h + m else 0.0}
+        return out
 
     def snapshot(self) -> dict:
         total = self.hits + self.misses
@@ -60,6 +84,7 @@ class BlockCache:
             "hits": self.hits,
             "misses": self.misses,
             "hit_rate": self.hits / total if total else 0.0,
+            "by_class": self.by_class(),
         }
 
     def clear(self) -> None:

@@ -24,6 +24,7 @@ import numpy as np
 from ..core.gloran import GloranConfig
 from ..lsm import LSMConfig, LSMTree
 from ..lsm.merge import merge_runs
+from ..obs import MetricsRegistry, span
 from .executor import EngineConfig, ShardExecutor
 from .pending import PendingBatch
 from .plan import OpBatch, Planner
@@ -79,6 +80,7 @@ class Engine:
                            gloran_config=gloran_config)
             self.shards.append(ShardExecutor(tree, self.config))
         self.stats_ = EngineStats()
+        self.metrics = MetricsRegistry()
         pl = self.config.pipeline
         if pl is None:
             pl = os.environ.get("REPRO_ENGINE_PIPELINE", "1") != "0"
@@ -101,22 +103,26 @@ class Engine:
         if pipeline is None:
             pipeline = self.pipeline_default
         pipeline = bool(pipeline) and self.num_shards > 1
-        plan = self.planner.plan(batch)
-        if not pipeline:
-            # Serialize with in-flight pipelined work, execute inline,
-            # and collect immediately so a dropped handle still lands
-            # in stats (wait() is idempotent for later accessors).
-            self.drain()
-            pending = PendingBatch(self, plan, pipeline=False)
+        with span("engine.submit", kind=batch.kind_name, n_ops=len(batch),
+                  pipelined=pipeline):
+            plan = self.planner.plan(batch)
+            if not pipeline:
+                # Serialize with in-flight pipelined work, execute
+                # inline, and collect immediately so a dropped handle
+                # still lands in stats (wait() is idempotent for later
+                # accessors).
+                self.drain()
+                pending = PendingBatch(self, plan, pipeline=False)
+                pending._start()
+                return pending.wait()
+            pending = PendingBatch(self, plan, pipeline=True)
+            # Launch before publishing: a concurrent drain()/stats()
+            # must never collect a handle whose shard plans haven't
+            # started.
             pending._start()
-            return pending.wait()
-        pending = PendingBatch(self, plan, pipeline=True)
-        # Launch before publishing: a concurrent drain()/stats() must
-        # never collect a handle whose shard plans haven't started.
-        pending._start()
-        with self._inflight_lock:
-            self._inflight.append(pending)
-        return pending
+            with self._inflight_lock:
+                self._inflight.append(pending)
+            return pending
 
     def drain(self) -> None:
         """Block until every in-flight submitted batch has collected."""
@@ -295,9 +301,29 @@ class Engine:
         snaps = [sh.cache.snapshot() for sh in self.shards]
         hits = sum(s["hits"] for s in snaps)
         misses = sum(s["misses"] for s in snaps)
+        by_class: dict = {}
+        for s in snaps:
+            for cls, d in s["by_class"].items():
+                agg = by_class.setdefault(cls, {"hits": 0, "misses": 0})
+                agg["hits"] += d["hits"]
+                agg["misses"] += d["misses"]
+        for d in by_class.values():
+            tot = d["hits"] + d["misses"]
+            d["hit_rate"] = d["hits"] / tot if tot else 0.0
         return {"hits": hits, "misses": misses,
                 "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+                "by_class": by_class,
                 "per_shard": snaps}
+
+    def reset_stats(self) -> None:
+        """Start a fresh stats window: drain in-flight work, then zero
+        the engine rollups (op counts, walls, I/O attribution, latency
+        histograms) and the unified metrics snapshot.  The shard-local
+        cumulative ledgers (IOStats, kernel counters, cache hit totals)
+        keep running — windowed deltas of those belong to the caller."""
+        self.drain()
+        self.stats_.reset()
+        self.metrics.reset()
 
     def stats(self) -> dict:
         self.drain()
@@ -307,7 +333,7 @@ class Engine:
             if sh.tree.gloran is not None]
         if staging:
             self.stats_.record_staging(staging)
-        return {
+        out = {
             "num_shards": self.num_shards,
             "partition": self.router.partition,
             "pipeline": self.pipeline_default,
@@ -318,3 +344,25 @@ class Engine:
             "cache": self.cache_snapshot(),
             "kernels": self.kernel_counters.snapshot(),
         }
+        # One namespaced flat schema absorbing every subsystem ledger
+        # (kernels, I/O, cache incl. per-op-class, staging occupancy,
+        # engine batch counters) — the dashboard/alerting surface.
+        m = self.metrics
+        m.absorb("kernels", out["kernels"])
+        m.absorb("io", {k: v for k, v in out["io"].items()
+                        if k != "by_tag"})
+        m.absorb("io.by_tag", out["io"]["by_tag"])
+        m.absorb("cache", {k: out["cache"][k]
+                           for k in ("hits", "misses", "hit_rate")})
+        m.absorb("cache.by_class", out["cache"]["by_class"])
+        m.absorb("engine", {
+            "pipelined_batches": self.stats_.pipelined_batches,
+            "serial_batches": self.stats_.serial_batches,
+            "entries": out["entries"],
+            "num_shards": self.num_shards})
+        if self.stats_.staging:
+            m.absorb("staging", {k: v for k, v in
+                                 self.stats_.staging.items()
+                                 if k != "per_shard"})
+        out["metrics"] = m.snapshot()
+        return out

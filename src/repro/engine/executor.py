@@ -54,8 +54,10 @@ from ..kernels.cascade.ops import cascade_lookup
 from ..kernels.interval.ops import interval_query
 from ..kernels.merge.ops import merge_ranks
 from ..lsm.tree import CascadeVerdict, LSMTree
+from ..obs import span
 from .cache import BlockCache
-from .plan import OP_DELETE, OP_GET, OP_PUT, OP_RANGE_SCAN, ShardPlan
+from .plan import (KIND_NAMES, OP_DELETE, OP_GET, OP_PUT, OP_RANGE_SCAN,
+                   ShardPlan)
 # _U32_LIMIT / _next_pow2 are shared with the registry: both kernel
 # paths must gate and pad identically for cascade parity to hold.
 from .registry import DeviceFilterRegistry, _next_pow2, _U32_LIMIT
@@ -136,20 +138,25 @@ class ShardExecutor:
         """
         t0 = time.perf_counter()
         payloads: list = []
-        for step in sp.steps:
-            if step.kind == OP_PUT:
-                self.put_batch(step.keys, step.vals)
-            elif step.kind == OP_DELETE:
-                self.delete_batch(step.keys)
-            elif step.kind == OP_GET:
-                found, vals = self.get_batch(step.keys)
-                payloads.append((OP_GET, step.idx, found, vals))
-            elif step.kind == OP_RANGE_SCAN:
-                res = self.range_scan_batch(
-                    list(zip(step.los.tolist(), step.his.tolist())))
-                payloads.append((OP_RANGE_SCAN, step.idx, res))
-            else:  # OP_RANGE_DELETE (bounds already clipped per shard)
-                self.range_delete_arrays(step.los, step.his)
+        with span("shard.plan", shard=sp.shard, batch=sp.seq,
+                  steps=len(sp.steps), n_ops=sp.n_ops):
+            for step in sp.steps:
+                with span("shard." + KIND_NAMES[step.kind], n=len(step),
+                          shard=sp.shard, batch=sp.seq):
+                    if step.kind == OP_PUT:
+                        self.put_batch(step.keys, step.vals)
+                    elif step.kind == OP_DELETE:
+                        self.delete_batch(step.keys)
+                    elif step.kind == OP_GET:
+                        found, vals = self.get_batch(step.keys)
+                        payloads.append((OP_GET, step.idx, found, vals))
+                    elif step.kind == OP_RANGE_SCAN:
+                        res = self.range_scan_batch(
+                            list(zip(step.los.tolist(),
+                                     step.his.tolist())))
+                        payloads.append((OP_RANGE_SCAN, step.idx, res))
+                    else:  # OP_RANGE_DELETE (bounds clipped per shard)
+                        self.range_delete_arrays(step.los, step.his)
         return payloads, time.perf_counter() - t0
 
     # ------------------------------------------------------------ reads
@@ -169,6 +176,7 @@ class ShardExecutor:
         The fused cascade hook answers the whole filter stack in one
         launch when its gates admit the batch; the per-level bloom /
         interval hooks are the ungated fallback for the same call."""
+        self.cache.op_class = "get"
         return self.tree.get_batch(
             np.asarray(keys, dtype=np.uint64),
             cache=self.cache if self.cache.enabled else None,
@@ -218,6 +226,7 @@ class ShardExecutor:
         positions on the merge-rank kernel hook, and slice charges
         absorbed by the shard's block cache; one (keys, vals) pair per
         requested [lo, hi), in request order."""
+        self.cache.op_class = "range_scan"
         return self.tree.range_scan_batch(
             ranges, validity_fn=self._validity_fn(),
             cache=self.cache if self.cache.enabled else None,

@@ -24,6 +24,7 @@ import time
 
 import numpy as np
 
+from ..obs import span
 from .plan import OP_GET, Plan
 
 
@@ -83,13 +84,20 @@ class PendingBatch:
         """Block until executed + merged; safe to call repeatedly."""
         with self._lock:
             if not self._collected:
-                self._collect()
+                with span("engine.collect",
+                          kind=self.plan.batch.kind_name,
+                          batch=self.plan.seq,
+                          pipelined=self.pipeline):
+                    self._collect()
                 self._collected = True
         return self
 
     def _collect(self) -> None:
         if self._futures is not None:
-            payloads = {s: f.result() for s, f in self._futures.items()}
+            # The blocking part: waiting out the slowest shard plan.
+            with span("engine.wait", batch=self.plan.seq):
+                payloads = {s: f.result()
+                            for s, f in self._futures.items()}
         elif self._payloads is not None:
             payloads = self._payloads
         elif not any(self.plan.shard_plans):

@@ -20,9 +20,11 @@ n+1 can overlap executing batch n (see ``engine.pending``).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from itertools import count
 
 import numpy as np
 
+from ..obs import span
 from .router import ShardRouter
 
 # Op kind codes (stable: these are the OpBatch column encoding).
@@ -244,6 +246,7 @@ class ShardPlan:
 
     shard: int
     steps: list[PlanStep] = field(default_factory=list)
+    seq: int = -1  # owning Plan's batch number (trace correlation)
 
     @property
     def n_ops(self) -> int:
@@ -259,6 +262,7 @@ class Plan:
 
     batch: OpBatch
     shard_plans: list[ShardPlan]
+    seq: int = -1  # planner-assigned batch number (trace correlation)
 
     @property
     def n_ops(self) -> int:
@@ -283,8 +287,15 @@ class Planner:
 
     def __init__(self, router: ShardRouter):
         self.router = router
+        self._seq = count()
 
     def plan(self, batch: OpBatch) -> Plan:
+        seq = next(self._seq)
+        with span("plan.compile", kind=batch.kind_name,
+                  n_ops=len(batch), batch=seq):
+            return self._plan(batch, seq)
+
+    def _plan(self, batch: OpBatch, seq: int) -> Plan:
         ns = self.router.num_shards
         kinds = batch.kinds
         point_ids = np.flatnonzero(kinds <= OP_GET)
@@ -317,7 +328,9 @@ class Planner:
                 order = np.argsort(oidx, kind="stable")
                 oidx, slo, shi = oidx[order], slo[order], shi[order]
             plans.append(self._shard_plan(s, batch, oidx, slo, shi))
-        return Plan(batch=batch, shard_plans=plans)
+        for sp in plans:
+            sp.seq = seq
+        return Plan(batch=batch, shard_plans=plans, seq=seq)
 
     def _shard_plan(self, s: int, batch: OpBatch, oidx: np.ndarray,
                     slo, shi) -> ShardPlan:

@@ -40,6 +40,7 @@ import numpy as np
 from ..kernels.cascade.ops import (CascadeState, MAX_PACK_AREAS,
                                    MAX_PACK_BYTES, MAX_PACK_KEYS,
                                    MAX_PACK_WORDS, pack_bytes)
+from ..obs import span
 from .stats import KernelCounters
 
 _U32_LIMIT = 0xFFFFFFFF
@@ -152,7 +153,9 @@ class DeviceFilterRegistry:
                None if gl_levels is None else len(gl_levels))
         if key == self._view_key:
             return self._view
-        view = self._build(tree, lvls, gl_levels)
+        with span("registry.pack", levels=len(lvls),
+                  gl_levels=len(gl_levels or [])):
+            view = self._build(tree, lvls, gl_levels)
         self._view, self._view_key = view, key
         return view
 
@@ -235,34 +238,37 @@ class DeviceFilterRegistry:
         piece = self._runs.get(lvl.uid)
         if piece is not None and piece.sstable is lvl:
             return piece
-        n = len(lvl)
-        pad = _next_pow2(n)
-        keys = np.full(pad, _U32_LIMIT, np.uint32)
-        keys[:n] = lvl.keys.astype(np.uint32)
-        seqs = np.zeros(pad, np.uint32)
-        seqs[:n] = lvl.seqs.astype(np.uint32)
-        bb = lvl.bloom
-        wpad = _next_pow2(len(bb.words))
-        words = np.zeros(wpad, np.uint32)
-        words[:len(bb.words)] = bb.words
-        piece = _RunPiece(sstable=lvl, keys=jnp.asarray(keys),
-                          seqs=jnp.asarray(seqs), words=jnp.asarray(words),
-                          n=n, m_bits=bb.m_bits, seeds=bb.seeds)
-        self.counters.upload_bytes += \
-            keys.nbytes + seqs.nbytes + words.nbytes
-        self._runs[lvl.uid] = piece
+        with span("registry.upload_run", uid=lvl.uid, entries=len(lvl)):
+            n = len(lvl)
+            pad = _next_pow2(n)
+            keys = np.full(pad, _U32_LIMIT, np.uint32)
+            keys[:n] = lvl.keys.astype(np.uint32)
+            seqs = np.zeros(pad, np.uint32)
+            seqs[:n] = lvl.seqs.astype(np.uint32)
+            bb = lvl.bloom
+            wpad = _next_pow2(len(bb.words))
+            words = np.zeros(wpad, np.uint32)
+            words[:len(bb.words)] = bb.words
+            piece = _RunPiece(sstable=lvl, keys=jnp.asarray(keys),
+                              seqs=jnp.asarray(seqs),
+                              words=jnp.asarray(words),
+                              n=n, m_bits=bb.m_bits, seeds=bb.seeds)
+            self.counters.upload_bytes += \
+                keys.nbytes + seqs.nbytes + words.nbytes
+            self._runs[lvl.uid] = piece
         return piece
 
     def _gl_piece(self, lvl) -> _GlPiece:
         piece = self._gl.get(id(lvl))
         if piece is not None and piece.level is lvl:
             return piece
-        lo, hi, smin, smax, n = clamp_level_u32(lvl.areas)
-        piece = _GlPiece(level=lvl, lo=jnp.asarray(lo),
-                         hi=jnp.asarray(hi), smin=jnp.asarray(smin),
-                         smax=jnp.asarray(smax), n=n)
-        self.counters.upload_bytes += 4 * lo.nbytes
-        self._gl[id(lvl)] = piece
+        with span("registry.upload_gl", areas=len(lvl.areas)):
+            lo, hi, smin, smax, n = clamp_level_u32(lvl.areas)
+            piece = _GlPiece(level=lvl, lo=jnp.asarray(lo),
+                             hi=jnp.asarray(hi), smin=jnp.asarray(smin),
+                             smax=jnp.asarray(smax), n=n)
+            self.counters.upload_bytes += 4 * lo.nbytes
+            self._gl[id(lvl)] = piece
         return piece
 
     def _evict(self, tree, gl_levels) -> None:

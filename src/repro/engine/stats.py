@@ -10,6 +10,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from ..obs import LatencyHistogram
+
 
 @dataclass
 class KernelCounters:
@@ -62,6 +64,8 @@ class EngineStats:
     pipelined_batches: int = 0
     serial_batches: int = 0
     staging: dict = field(default_factory=dict)      # buffer occupancy
+    latency: dict = field(default_factory=dict)      # op -> histogram
+    shard_latency: dict = field(default_factory=dict)  # shard -> histogram
 
     def record(self, op: str, n: int, seconds: float,
                io_reads: int = 0, io_writes: int = 0) -> None:
@@ -70,6 +74,10 @@ class EngineStats:
         self.batches[op] = self.batches.get(op, 0) + 1
         self.io_reads[op] = self.io_reads.get(op, 0) + int(io_reads)
         self.io_writes[op] = self.io_writes.get(op, 0) + int(io_writes)
+        hist = self.latency.get(op)
+        if hist is None:
+            hist = self.latency[op] = LatencyHistogram()
+        hist.record(seconds)
 
     def record_shards(self, walls: dict, pipelined: bool) -> None:
         """Per-shard busy/stall seconds for one submitted batch.
@@ -91,6 +99,10 @@ class EngineStats:
             self.shard_wall[s] = self.shard_wall.get(s, 0.0) + float(w)
             self.shard_stall[s] = self.shard_stall.get(s, 0.0) + \
                 float(crit - w)
+            hist = self.shard_latency.get(s)
+            if hist is None:
+                hist = self.shard_latency[s] = LatencyHistogram()
+            hist.record(w)
 
     def record_staging(self, per_shard: list[dict]) -> None:
         """Current staging-buffer occupancy across the GLORAN shards.
@@ -107,6 +119,20 @@ class EngineStats:
             "occupancy": round(recs / cap, 4) if cap else 0.0,
             "per_shard": per_shard,
         }
+
+    def reset(self) -> None:
+        """Zero every rollup (counts, walls, I/O, histograms).
+
+        Long-lived serving sessions call this at window boundaries so
+        ``snapshot()`` reports per-window latency/throughput instead of
+        since-boot cumulative only (see ``Engine.reset_stats``).
+        """
+        for d in (self.ops, self.wall, self.batches, self.io_reads,
+                  self.io_writes, self.shard_wall, self.shard_stall,
+                  self.staging, self.latency, self.shard_latency):
+            d.clear()
+        self.pipelined_batches = 0
+        self.serial_batches = 0
 
     def ops_per_sec(self, op: str) -> float:
         return self.ops.get(op, 0) / max(self.wall.get(op, 0.0), 1e-12)
@@ -131,9 +157,18 @@ class EngineStats:
         ``shard_wall_seconds`` / ``shard_stall_seconds`` per-shard
         busy/idle time across submitted batches; ``pipelined_batches`` /
         ``serial_batches`` how each batch executed; ``staging_buffer``
-        the current range-delete staging-buffer occupancy.
+        the current range-delete staging-buffer occupancy; ``latency``
+        per-op-class batch-latency histograms (count/mean/p50/p95/p99,
+        microseconds) and ``shard_latency`` the same per shard over its
+        plan execution walls — the tail-latency view the scalar
+        ``us_per_op`` mean cannot give.
         """
         return {
+            "latency": {k: h.snapshot()
+                        for k, h in sorted(self.latency.items())},
+            "shard_latency": {s: h.snapshot()
+                              for s, h in sorted(self.shard_latency
+                                                 .items())},
             "pipelined_batches": self.pipelined_batches,
             "serial_batches": self.serial_batches,
             "staging_buffer": dict(self.staging),

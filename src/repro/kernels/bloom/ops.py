@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import span
 from .kernel import LANES, bloom_probe_pallas
 from .ref import mix32_ref
 
@@ -34,6 +35,12 @@ def bloom_probe(keys32, words, *, m_bits: int, seeds: tuple[int, ...],
     keys32: (n,) uint32; words: (n_words,) uint32 bit array; m_bits: filter
     size in bits; seeds: per-hash 32-bit seeds.
     """
+    with span("kernel.bloom", n=int(np.shape(keys32)[0])):
+        return _bloom_probe(keys32, words, m_bits=m_bits, seeds=seeds,
+                            block_rows=block_rows, interpret=interpret)
+
+
+def _bloom_probe(keys32, words, *, m_bits, seeds, block_rows, interpret):
     if interpret is None:
         interpret = _default_interpret()
     keys32 = jnp.asarray(keys32, dtype=jnp.uint32)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import span
 from .kernel import LANES, cascade_pallas
 from .ref import cascade_flat
 
@@ -100,6 +101,15 @@ def cascade_lookup(qkey32, qhash32, qseq32, qres, state: CascadeState, *,
     coverage of (key, resolved seq), and (n, L) int64 level-local
     candidate positions.
     """
+    with span("kernel.cascade", n=len(qkey32), levels=state.L,
+              gl_levels=state.G):
+        return _cascade_lookup(qkey32, qhash32, qseq32, qres, state,
+                               block_rows=block_rows, interpret=interpret,
+                               compiled=compiled)
+
+
+def _cascade_lookup(qkey32, qhash32, qseq32, qres, state, *,
+                    block_rows, interpret, compiled):
     if compiled is None:
         compiled = _default_interpret()
     if interpret is None:

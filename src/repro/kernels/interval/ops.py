@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import span
 from .kernel import LANES, interval_query_pallas
 
 MAX_AREAS_PER_CALL = 1 << 20  # 4 arrays x 4 B x 1 Mi = 16 MB VMEM budget/4
@@ -23,6 +24,14 @@ def _default_interpret() -> bool:
 def interval_query(keys32, seqs32, lo, hi, smin, smax, *,
                    block_rows: int = 8, interpret: bool | None = None):
     """Returns bool (n,): is (key, seq) covered by the disjoint level?"""
+    with span("kernel.interval", n=int(np.shape(keys32)[0]),
+              areas=int(np.shape(lo)[0])):
+        return _interval_query(keys32, seqs32, lo, hi, smin, smax,
+                               block_rows=block_rows, interpret=interpret)
+
+
+def _interval_query(keys32, seqs32, lo, hi, smin, smax, *,
+                    block_rows, interpret):
     if interpret is None:
         interpret = _default_interpret()
     keys32 = jnp.asarray(keys32, jnp.uint32)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import span
 from .kernel import LANES, merge_rank_pallas
 from .ref import merge_ranks_ref
 
@@ -63,6 +64,12 @@ def merge_ranks(ka: np.ndarray, kb: np.ndarray, *, block_rows: int = 8,
     """
     ka = np.asarray(ka)
     kb = np.asarray(kb)
+    with span("kernel.merge", n=len(ka) + len(kb)):
+        return _merge_ranks(ka, kb, block_rows=block_rows,
+                            interpret=interpret, compiled=compiled)
+
+
+def _merge_ranks(ka, kb, *, block_rows, interpret, compiled):
     na, nb = len(ka), len(kb)
     if interpret is None:
         interpret = _default_interpret()

@@ -120,7 +120,7 @@ def lower_cell(arch: str, shape_name: str, mesh_name: str,
     batch_abs = input_specs(cfg, shape, model, microbatch=microbatch)
     batch_sh = batch_shardings(cfg, shape, mesh, rules, model)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape.kind == "train":
         opt_cfg = OptimizerConfig(name=cfg.optimizer)
         init_fn, _ = make_optimizer(opt_cfg)
@@ -148,11 +148,11 @@ def lower_cell(arch: str, shape_name: str, mesh_name: str,
                 donate_argnums=(2,) if donate else ()).lower(
                     params_abs, batch_abs["token"], batch_abs["cache"],
                     jax.ShapeDtypeStruct((), jnp.int32))
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     rep = analyze_compiled(compiled, arch=arch, shape=shape_name,
                            mesh_name=mesh_name, chips=chips,

@@ -24,6 +24,7 @@ import numpy as np
 
 from ..core.gloran import GloranConfig, GloranIndex
 from ..core.iostats import IOStats
+from ..obs import span
 from .format import LSMConfig, PUT, TOMBSTONE
 from .merge import empty_run, merge_runs, newest_wins
 from .sstable import RangeTombstoneBlock, SSTable, build_sstable
@@ -442,6 +443,11 @@ class LSMTree:
     def flush(self) -> None:
         if not self.mem and not self.mem_rts:
             return
+        with span("lsm.flush", entries=len(self.mem),
+                  range_tombstones=len(self.mem_rts)):
+            self._flush()
+
+    def _flush(self) -> None:
         if self.mem:
             items = np.array([(k, s, t, v)
                               for k, (s, t, v) in self.mem.items()],
@@ -500,6 +506,10 @@ class LSMTree:
 
     def _compact(self, i: int) -> None:
         """Merge level i into level i+1 (leveling)."""
+        with span("lsm.compact", level=i, entries=len(self.levels[i])):
+            self._compact_impl(i)
+
+    def _compact_impl(self, i: int) -> None:
         src = self.levels[i]
         self.levels[i] = None
         while len(self.levels) <= i + 1:

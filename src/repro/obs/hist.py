@@ -1,0 +1,118 @@
+"""Fixed-bucket log-scale latency histograms with tail quantiles.
+
+``EngineStats`` kept only totals and means, so the paper's headline
+effect — a *tail* latency shift under range-delete churn — was
+invisible.  ``LatencyHistogram`` records durations into geometric
+buckets (4 per octave, 100 ns .. ~100 s) at O(1) per sample and answers
+``p50/p95/p99`` by log-linear interpolation inside the covering bucket;
+the relative quantile error is bounded by one bucket ratio
+(2^0.25 ~ 19%, typically far less — tested against ``np.percentile``).
+
+Histograms merge (per-shard -> fleet), reset (per-window serving
+stats), and snapshot into a stable JSON schema.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+_LO = 1e-7                  # bucket 0 lower edge: 100 ns
+_PER_OCTAVE = 4             # buckets per factor-of-2 (ratio 2^0.25)
+_NB = 124                   # covers _LO * 2^(124/4) ~ 215 s
+_INV_LN2 = 1.0 / math.log(2.0)
+
+
+def _bucket(seconds: float) -> int:
+    if seconds <= _LO:
+        return 0
+    i = int(math.log(seconds / _LO) * _INV_LN2 * _PER_OCTAVE)
+    return i if i < _NB else _NB - 1
+
+
+def _edge(i: int) -> float:
+    """Lower edge of bucket ``i`` in seconds."""
+    return _LO * 2.0 ** (i / _PER_OCTAVE)
+
+
+class LatencyHistogram:
+    """O(1)-record log-bucket histogram over durations in seconds."""
+
+    __slots__ = ("counts", "n", "total", "vmin", "vmax")
+
+    def __init__(self):
+        self.counts = np.zeros(_NB, dtype=np.int64)
+        self.n = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = 0.0
+
+    def record(self, seconds: float) -> None:
+        s = float(seconds)
+        self.counts[_bucket(s)] += 1
+        self.n += 1
+        self.total += s
+        if s < self.vmin:
+            self.vmin = s
+        if s > self.vmax:
+            self.vmax = s
+
+    def record_many(self, seconds) -> None:
+        for s in np.asarray(seconds, dtype=float).ravel():
+            self.record(float(s))
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        self.counts += other.counts
+        self.n += other.n
+        self.total += other.total
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+        return self
+
+    def reset(self) -> None:
+        self.counts[:] = 0
+        self.n = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = 0.0
+
+    # -------------------------------------------------------- quantiles
+    def quantile(self, q: float) -> float:
+        """The q-quantile in seconds (0 when empty).
+
+        Log-linear interpolation inside the covering bucket, clamped to
+        the observed [min, max] so the extremes are exact.
+        """
+        if self.n == 0:
+            return 0.0
+        rank = q * (self.n - 1)
+        cum = np.cumsum(self.counts)
+        i = int(np.searchsorted(cum, rank, side="right"))
+        if i >= _NB:
+            i = _NB - 1
+        prev = int(cum[i - 1]) if i else 0
+        inb = int(self.counts[i])
+        frac = (rank - prev + 0.5) / inb if inb else 0.5
+        frac = min(max(frac, 0.0), 1.0)
+        lo, hi = _edge(i), _edge(i + 1)
+        v = lo * (hi / lo) ** frac
+        return min(max(v, self.vmin), self.vmax)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def snapshot(self) -> dict:
+        """Stable JSON schema: counts + microsecond summary quantiles."""
+        us = 1e6
+        return {
+            "count": int(self.n),
+            "total_seconds": round(self.total, 6),
+            "mean_us": round(self.mean * us, 3),
+            "min_us": round(self.vmin * us, 3) if self.n else 0.0,
+            "max_us": round(self.vmax * us, 3),
+            "p50_us": round(self.quantile(0.50) * us, 3),
+            "p95_us": round(self.quantile(0.95) * us, 3),
+            "p99_us": round(self.quantile(0.99) * us, 3),
+        }

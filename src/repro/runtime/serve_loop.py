@@ -29,6 +29,7 @@ from ..core.gloran import GloranConfig
 from ..engine import Engine, EngineConfig, OpBatch, PendingBatch
 from ..lsm import LSMConfig
 from ..models import Transformer, tree_init
+from ..obs import span
 
 PAGE_BITS = 16
 
@@ -178,10 +179,12 @@ class ServeLoop:
             io0 = self.registry.io_reads
             pending = self.registry.lookup_submit(
                 session_ids, np.full(b, t % 4, dtype=np.uint64))
-            logits, cache = self._decode(self.params, tok, cache,
-                                         p_len + t)
+            with span("serve.decode", step=t, batch=b):
+                logits, cache = self._decode(self.params, tok, cache,
+                                             p_len + t)
             t_wait = time.perf_counter()
-            pending.get_results()
+            with span("serve.collect", step=t):
+                pending.get_results()
             self.stats.registry_stall_seconds += \
                 time.perf_counter() - t_wait
             self.stats.registry_lookups += b

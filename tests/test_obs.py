@@ -1,0 +1,279 @@
+"""Observability layer: tracer spans + Chrome export, latency
+histograms, the metrics registry, and their engine integration."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.analysis.report import trace_report
+from repro.engine import Engine, EngineConfig, OpBatch
+from repro.lsm import LSMConfig
+from repro.obs import (LatencyHistogram, MetricsRegistry, NULL_TRACER,
+                       Tracer)
+
+UNIVERSE = 1 << 20
+
+
+# --------------------------------------------------------------- tracer
+def test_null_tracer_is_default_and_freely_nestable():
+    assert not obs.tracing_enabled()
+    with obs.span("a.b", n=1) as s1, obs.span("c.d") as s2:
+        assert s1 is s2  # the shared no-op span: no allocation per call
+
+
+def test_tracer_records_spans_with_attrs():
+    with obs.enabled() as tr:
+        with obs.span("stage.outer", n=3):
+            with obs.span("stage.inner"):
+                pass
+    evs = tr.chrome_events()
+    xs = [e for e in evs if e["ph"] == "X"]
+    by_name = {e["name"]: e for e in xs}
+    assert set(by_name) == {"stage.outer", "stage.inner"}
+    assert by_name["stage.outer"]["args"] == {"n": 3}
+    assert by_name["stage.outer"]["cat"] == "stage"
+
+
+def test_enabled_scope_restores_previous_tracer():
+    prev = obs.get_tracer()
+    with obs.enabled():
+        assert obs.tracing_enabled()
+    assert obs.get_tracer() is prev
+
+
+def test_chrome_events_well_formed_and_nested():
+    """Every X event carries a matched begin/end (ts, ts+dur), timestamps
+    are monotone against the tracer base, and a child span's window sits
+    inside its parent's."""
+    with obs.enabled() as tr:
+        with obs.span("p.outer"):
+            with obs.span("p.inner"):
+                pass
+        with obs.span("p.later"):
+            pass
+    evs = tr.chrome_events()
+    json.dumps(evs)  # serializable as-is
+    xs = [e for e in evs if e["ph"] == "X"]
+    for e in xs:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        assert set(e) >= {"name", "cat", "ph", "ts", "dur", "pid", "tid"}
+    by_name = {e["name"]: e for e in xs}
+    inner, outer = by_name["p.inner"], by_name["p.outer"]
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-9
+    assert by_name["p.later"]["ts"] >= outer["ts"] + outer["dur"] - 1e-9
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert any(m["name"] == "thread_name" for m in meta)
+
+
+def test_export_chrome_loads_back(tmp_path):
+    path = tmp_path / "trace.json"
+    with obs.enabled() as tr:
+        with obs.span("x.y"):
+            pass
+    tr.export_chrome(str(path))
+    data = json.loads(path.read_text())
+    assert isinstance(data["traceEvents"], list)
+    assert any(e.get("name") == "x.y" for e in data["traceEvents"])
+
+
+def test_tracer_thread_safety_and_thread_tracks():
+    tr = Tracer()
+    gate = threading.Barrier(4)  # hold all threads live: distinct idents
+
+    def work():
+        gate.wait()
+        for i in range(200):
+            with tr.span("t.work", i=i):
+                pass
+        gate.wait()
+
+    threads = [threading.Thread(target=work) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(tr.events()) == 800
+    tids = {e["tid"] for e in tr.chrome_events() if e["ph"] == "X"}
+    assert len(tids) == 4
+
+
+def test_tracer_bounded_drops_not_grows():
+    tr = Tracer(max_events=10)
+    for _ in range(25):
+        with tr.span("d.x"):
+            pass
+    assert len(tr.events()) == 10
+    assert tr.dropped == 15
+
+
+# ----------------------------------------------------------- histograms
+def test_histogram_quantiles_track_np_percentile():
+    rng = np.random.default_rng(0)
+    # Log-uniform latencies: 1us .. 100ms, the range the buckets serve.
+    vals = np.exp(rng.uniform(np.log(1e-6), np.log(0.1), size=20_000))
+    h = LatencyHistogram()
+    h.record_many(vals)
+    for q in (0.5, 0.9, 0.95, 0.99):
+        got = h.quantile(q)
+        want = float(np.percentile(vals, q * 100))
+        # 4 buckets/octave -> <= 2^(1/4)-1 ~ 19% relative bucket error.
+        assert abs(got - want) / want < 0.19, (q, got, want)
+
+
+def test_histogram_extremes_and_snapshot_schema():
+    h = LatencyHistogram()
+    assert h.quantile(0.5) == 0.0 and h.mean == 0.0
+    h.record(3.2e-5)
+    assert h.quantile(0.0) == h.quantile(1.0) == pytest.approx(3.2e-5)
+    h.record_many(np.full(9, 3.2e-5))
+    snap = h.snapshot()
+    assert set(snap) == {"count", "total_seconds", "mean_us", "min_us",
+                         "max_us", "p50_us", "p95_us", "p99_us"}
+    assert snap["count"] == 10
+    assert snap["p99_us"] == pytest.approx(32.0, rel=1e-6)
+    json.dumps(snap)
+
+
+def test_histogram_merge_and_reset():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    a.record_many([1e-4] * 5)
+    b.record_many([1e-2] * 5)
+    a.merge(b)
+    assert a.snapshot()["count"] == 10
+    assert a.quantile(0.1) == pytest.approx(1e-4, rel=0.19)
+    assert a.quantile(0.9) == pytest.approx(1e-2, rel=0.19)
+    a.reset()
+    assert a.snapshot()["count"] == 0
+
+
+# ------------------------------------------------------ metrics registry
+def test_metrics_registry_namespacing_and_schema():
+    m = MetricsRegistry()
+    m.inc("ops.count")
+    m.inc("ops.count", 2)
+    m.set("gauge.ratio", 0.5)
+    m.absorb("kernels", {"bloom_calls": 3,
+                         "nested": {"deep": 7, "skip_list": [1, 2]}})
+    snap = m.snapshot()
+    assert snap["ops.count"] == 3
+    assert snap["kernels.nested.deep"] == 7
+    assert "kernels.nested.skip_list" not in snap  # scalars only
+    assert list(snap) == sorted(snap)  # stable key order
+    json.dumps(snap)
+    m.reset()
+    assert m.snapshot() == {}
+
+
+# --------------------------------------------------- engine integration
+def _engine(**cfg):
+    eng = Engine(num_shards=2, strategy="gloran",
+                 lsm_config=LSMConfig(buffer_capacity=64, size_ratio=3,
+                                      key_size=16, value_size=48,
+                                      block_size=512,
+                                      key_universe=UNIVERSE),
+                 config=EngineConfig(**cfg) if cfg else None)
+    keys = np.arange(0, 4000, 2, dtype=np.uint64)
+    eng.put_batch(keys, keys + np.uint64(1))
+    eng.flush()
+    return eng, keys
+
+
+def test_engine_stats_latency_percentiles_per_op_and_shard():
+    eng, keys = _engine()
+    for i in range(4):
+        eng.get_batch(keys[i * 100:(i + 1) * 100])
+    eng.range_scan(100, 500)
+    snap = eng.stats()["engine"]
+    assert {"get", "put", "range_scan"} <= set(snap["latency"])
+    g = snap["latency"]["get"]
+    assert g["count"] == 4
+    assert 0 < g["p50_us"] <= g["p95_us"] <= g["p99_us"] <= g["max_us"]
+    assert set(snap["shard_latency"]) == {0, 1}
+    json.dumps(snap)
+
+
+def test_engine_metrics_snapshot_stable_keys():
+    eng, keys = _engine()
+    eng.get_batch(keys[:100])
+    snap = eng.stats()["metrics"]
+    assert any(k.startswith("kernels.") for k in snap)
+    assert any(k.startswith("io.") for k in snap)
+    assert "engine.entries" in snap and "cache.hit_rate" in snap
+    assert list(snap) == sorted(snap)
+    json.dumps(snap)
+
+
+def test_engine_reset_stats_gives_fresh_window():
+    eng, keys = _engine()
+    eng.get_batch(keys[:100])
+    assert eng.stats()["engine"]["latency"]["get"]["count"] == 1
+    eng.reset_stats()
+    snap = eng.stats()["engine"]
+    assert snap["latency"] == {} and snap["shard_latency"] == {}
+    eng.get_batch(keys[:100])
+    assert eng.stats()["engine"]["latency"]["get"]["count"] == 1
+
+
+def test_cache_hits_attributed_per_op_class():
+    eng, keys = _engine(cache_blocks=256)
+    eng.get_batch(keys[:200])
+    eng.get_batch(keys[:200])
+    eng.range_scan(0, 1000)
+    by_class = eng.stats()["cache"]["by_class"]
+    assert {"get", "range_scan"} <= set(by_class)
+    assert by_class["get"]["hits"] > 0
+    assert set(by_class["get"]) == {"hits", "misses", "hit_rate"}
+
+
+def test_engine_spans_cover_submit_to_shard(tmp_path):
+    eng, keys = _engine()
+    with obs.enabled() as tr:
+        eng.submit(OpBatch.gets(keys[:200])).get_results()
+        eng.drain()
+    names = {e["name"] for e in tr.events()}
+    assert {"engine.submit", "plan.compile", "shard.plan", "shard.get",
+            "engine.collect"} <= names
+    # Correlation: nested spans carry the planner-stamped batch seq.
+    plan = [e for e in tr.chrome_events()
+            if e["ph"] == "X" and e["name"] == "shard.plan"]
+    seqs = {e["args"]["batch"] for e in plan}
+    assert len(seqs) == 1 and seqs.pop() >= 0
+
+
+def test_trace_report_stalls_and_critical_path():
+    eng, keys = _engine()
+    with obs.enabled() as tr:
+        for i in range(3):
+            eng.submit(OpBatch.gets(keys[i * 300:(i + 1) * 300])) \
+                .get_results()
+        eng.drain()
+    rep = trace_report(tr.chrome_events())
+    assert len(rep["batches"]) == 3
+    assert set(rep["shards"]) == {0, 1}
+    share = sum(r["stall_share"] for r in rep["shards"].values())
+    assert share == pytest.approx(1.0) or share == 0.0
+    for b in rep["batches"]:
+        assert b["critical_us"] <= b["window_us"] + 1e-9
+    assert rep["wall_us"] >= rep["modeled_us"] - 1e-9
+    assert rep["lookups"] == 900
+    json.dumps(rep)
+
+
+def test_disabled_tracer_records_nothing_on_engine_path():
+    eng, keys = _engine()
+    assert not obs.tracing_enabled()
+    eng.get_batch(keys[:100])  # must not blow up, must not record
+    tr = Tracer()
+    obs.set_tracer(tr)
+    try:
+        eng.get_batch(keys[:100])
+    finally:
+        obs.set_tracer(NULL_TRACER)
+    assert len(tr.events()) > 0
+    n = len(tr.events())
+    eng.get_batch(keys[:100])  # after restore: nothing new recorded
+    assert len(tr.events()) == n
