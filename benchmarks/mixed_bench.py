@@ -51,9 +51,22 @@ wall-clock alone under-charges I/O):
             T_IO = 20us, a 4 KB NVMe random read — the paper's
             hardware, same constant as ``repro.baselines``.
 
-The acceptance figure is the modeled mixed-batch speedup, pipelined vs
-serial, geomean across mixes at the maximum shard count; per-mix rows
-carry both modeled and measured-wall numbers.
+Two acceptance figures:
+
+  modeled   the modeled mixed-batch speedup, pipelined vs serial,
+            geomean across mixes at the maximum shard count.
+  wall      ``wall_speedup``: MEASURED wall, pipelined multi-device vs
+            the serial single-device path, in timed-I/O mode
+            (``EngineConfig.io_wait_s = T_IO``: each shard worker
+            sleeps out the block I/Os its plan steps charge, so wall
+            time includes the store's device waits and those waits
+            overlap across shard workers exactly as concurrent NVMe
+            queues would).  Each shard is pinned to its own XLA device
+            (``shard_devices``; the bench forces
+            ``--xla_force_host_platform_device_count`` up front), so
+            kernel dispatch compute also overlaps.  This is the gated
+            number — the model stays as the projection, the wall clock
+            is the proof.
 """
 
 from __future__ import annotations
@@ -64,12 +77,18 @@ import time
 
 import numpy as np
 
-from repro.core import (GloranConfig, LSMDRTreeConfig, RAEConfig, RTree,
-                        StagingBuffer, disjointize)
-from repro.engine import Engine, EngineConfig, OpBatch
-from repro.lsm import LSMConfig
+from repro.launch.mesh import ensure_host_devices
 
 SMOKE = os.environ.get("REPRO_MIXED_BENCH_SMOKE") == "1"
+# Per-shard XLA devices need host-platform devices forced BEFORE jax's
+# backends initialize (first engine build); an XLA_FLAGS count already
+# forced by the environment (e.g. CI) is respected.
+ensure_host_devices(4)
+
+from repro.core import (GloranConfig, LSMDRTreeConfig, RAEConfig, RTree,  # noqa: E402
+                        StagingBuffer, disjointize)
+from repro.engine import Engine, EngineConfig, OpBatch  # noqa: E402
+from repro.lsm import LSMConfig  # noqa: E402
 SCALE = 4 if os.environ.get("REPRO_BENCH_SCALE") == "full" else 1
 OUT = os.environ.get("REPRO_BENCH_OUT", "BENCH_mixed.json")
 TRACE_OUT = os.environ.get("REPRO_TRACE_OUT", "")
@@ -124,17 +143,21 @@ def gloran_cfg() -> GloranConfig:
         eve=RAEConfig(capacity=100_000, key_universe=UNIVERSE))
 
 
-def engine_cfg(pipeline: bool) -> EngineConfig:
+def engine_cfg(pipeline: bool, devices: int | None = None) -> EngineConfig:
     # Kernel-heavy gating (the TPU-deployment stand-in, as in
     # engine_bench's fused-filter rows): every SSTable filter and
     # DR-tree level probe runs through the Pallas kernels, so the
     # pipeline's win — overlapping per-shard kernel launches instead of
     # queueing them behind one Python thread — is what gets measured.
     # The block cache stays off: its per-block host loop is serial
-    # Python, which engine_bench measures separately.
+    # Python, which engine_bench measures separately.  ``devices`` is
+    # passed explicitly (not left to REPRO_ENGINE_DEVICES) so the
+    # serial baseline is always the single-device path and the
+    # pipelined side always pins per-shard devices, whatever the env.
     return EngineConfig(partition="range", pipeline=pipeline,
                         cache_blocks=0, kernel_min_batch=32,
-                        kernel_min_areas=32, kernel_min_filter=512)
+                        kernel_min_areas=32, kernel_min_filter=512,
+                        devices=devices)
 
 
 def preload_keys() -> np.ndarray:
@@ -142,10 +165,11 @@ def preload_keys() -> np.ndarray:
         0, UNIVERSE, size=PRELOAD).astype(np.uint64)
 
 
-def make_engine(shards: int, pipeline: bool) -> Engine:
+def make_engine(shards: int, pipeline: bool,
+                devices: int | None = None) -> Engine:
     eng = Engine(num_shards=shards, strategy="gloran",
                  lsm_config=lsm_cfg(), gloran_config=gloran_cfg(),
-                 config=engine_cfg(pipeline))
+                 config=engine_cfg(pipeline, devices))
     keys = preload_keys()
     for i in range(0, len(keys), 8192):
         kk = keys[i:i + 8192]
@@ -240,14 +264,21 @@ def bench_cell(mix_name: str, shards: int) -> tuple[dict, dict]:
     host interference (shared CI cores) hits both sides alike; the
     reported speedup is the median per-rep ratio.
     """
-    engines = {False: make_engine(shards, False),
-               True: make_engine(shards, True)}
-    all_batches = mixed_batches(MIXES[mix_name], ROUNDS * REPS, seed=71)
+    # The serial engine IS the single-device baseline (devices=0, the
+    # ungated fallback path); the pipelined engine pins one XLA device
+    # per shard.  Both are explicit so the env can't change what this
+    # cell compares.
+    engines = {False: make_engine(shards, False, devices=0),
+               True: make_engine(shards, True, devices=shards)}
+    # Twice REPS measured rounds: the first half serves the modeled
+    # rows, the second half the timed-I/O wall_speedup reps.
+    all_batches = mixed_batches(MIXES[mix_name], ROUNDS * REPS * 2,
+                                seed=71)
     # Pre-warm every kernel shape the measured batches will launch on a
     # throwaway engine: jit compilation is process-global and one-time,
     # so neither measured side may pay it (whichever ran first would
     # otherwise foot the whole compile bill and look slower).
-    scratch = make_engine(shards, True)
+    scratch = make_engine(shards, True, devices=shards)
     for b in all_batches:
         scratch.submit(b).wait()
     del scratch
@@ -309,6 +340,35 @@ def bench_cell(mix_name: str, shards: int) -> tuple[dict, dict]:
         [s / p for s, p in zip(m_serial, m_piped)])), 2)
     rows[True]["speedup_vs_serial_wall"] = round(float(np.median(
         [s / p for s, p in zip(walls[False], walls[True])])), 2)
+    for pl in (False, True):
+        rows[pl]["devices"] = engines[pl].stats()["devices"]["distinct"]
+    # -------- measured-wall gate: timed-I/O mode (see module docstring).
+    # Same engines (both sides executed identical batches, so their tree
+    # states are identical), now sleeping out every charged block I/O.
+    # The serial single-device side pays its I/O sequentially; the
+    # pipelined per-device side overlaps shard waits and shard kernel
+    # compute — THE wall-clock win the model has been projecting, now
+    # measured.  Rows at <2 shards carry wall_speedup=None (no overlap
+    # to measure).
+    wall_speedup = None
+    timed: dict = {False: [], True: []}
+    if shards >= 2:
+        for eng in engines.values():
+            eng.config.io_wait_s = T_IO
+        for rep in range(REPS):
+            rep_batches = all_batches[1 + (REPS + rep) * ROUNDS:
+                                      1 + (REPS + rep + 1) * ROUNDS]
+            for pl in (False, True):
+                dt, _, _ = _measure(engines[pl], rep_batches)
+                timed[pl].append(dt)
+        wall_speedup = round(float(np.median(
+            [s / p for s, p in zip(timed[False], timed[True])])), 2)
+        rows[True]["wall_timed"] = {
+            "serial_single_device_s": round(sum(timed[False]), 4),
+            "pipelined_multi_device_s": round(sum(timed[True]), 4),
+            "io_wait_s_per_block": T_IO,
+        }
+    rows[True]["wall_speedup"] = wall_speedup
     return rows[False], rows[True]
 
 
@@ -408,7 +468,9 @@ def run() -> dict:
                   f"{serial['modeled_ops_per_sec']:,.0f} modeled ops/s, "
                   f"pipelined {piped['modeled_ops_per_sec']:,.0f} "
                   f"({piped['speedup_vs_serial_modeled']}x modeled, "
-                  f"{piped['speedup_vs_serial_wall']}x wall), stall "
+                  f"{piped['speedup_vs_serial_wall']}x wall, "
+                  f"{piped['wall_speedup']}x timed wall on "
+                  f"{piped['devices']} devices), stall "
                   f"{piped['shard_stall_frac']:.0%}", flush=True)
     max_s = max(SHARDS)
     target = [r for r in rows if r["shards"] == max_s
@@ -416,6 +478,8 @@ def run() -> dict:
     geo = float(np.exp(np.mean(np.log(
         [r["speedup_vs_serial_modeled"] for r in target])))) \
         if target else None
+    timed_rows = [r for r in rows if r["shards"] >= 2
+                  and r.get("wall_speedup") is not None]
     buf = bench_buffer_insert()
     result = {
         "config": {
@@ -456,6 +520,14 @@ def run() -> dict:
             "min_pipeline_speedup_max_shards_wall": min(
                 (r["speedup_vs_serial_wall"] for r in target),
                 default=None),
+            # THE wall-clock gate (scripts/check.sh): measured wall in
+            # timed-I/O mode, pipelined per-shard-device engines vs the
+            # serial single-device path, worst mix at >= 2 shards.
+            "min_wall_speedup_ge2_shards": min(
+                (r["wall_speedup"] for r in timed_rows), default=None),
+            "wall_speedup_max_shards": {
+                r["mix"]: r["wall_speedup"] for r in timed_rows
+                if r["shards"] == max_s},
         },
     }
     if TRACE_OUT:
@@ -465,7 +537,9 @@ def run() -> dict:
     print(f"# wrote {OUT}: geomean {max_s}-shard modeled pipeline "
           f"speedup = "
           f"{result['acceptance']['geomean_pipeline_speedup_max_shards']}"
-          f"x", flush=True)
+          f"x, min timed wall speedup (>=2 shards) = "
+          f"{result['acceptance']['min_wall_speedup_ge2_shards']}x",
+          flush=True)
     return result
 
 

@@ -5,7 +5,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+# Per-run pytest timeout when the plugin is available (CI installs
+# pytest-timeout): a deadlocked shard/device worker fails fast instead
+# of hanging the job.  Local environments without the plugin run plain.
+PYTEST_TIMEOUT=""
+if python -c "import pytest_timeout" 2>/dev/null; then
+    PYTEST_TIMEOUT="--timeout=900 --timeout-method=thread"
+fi
+python -m pytest -x -q ${PYTEST_TIMEOUT}
 
 REPRO_ENGINE_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_engine_smoke.json \
     python benchmarks/engine_bench.py
@@ -50,6 +57,14 @@ s = d["acceptance"]["geomean_pipeline_speedup_max_shards"]
 assert s is not None and s >= 1.5, \
     f"pipelined mixed-batch speedup regressed: {s}x < 1.5x vs serial"
 print(f"check OK: pipelined mixed batches {s}x (modeled) vs serial")
+# The tentpole gate: MEASURED wall in timed-I/O mode, pipelined
+# per-shard-device engines vs the serial single-device path — the
+# model's projected overlap must show up on the clock.
+w = d["acceptance"]["min_wall_speedup_ge2_shards"]
+assert w is not None and w >= 1.3, \
+    f"measured wall speedup regressed: {w}x < 1.3x at >=2 shards"
+print(f"check OK: measured timed-I/O wall speedup {w}x (>=2 shards, "
+      f"per-shard devices) vs serial single-device")
 # Delete-heavy smoke row (range-delete-dominant mix) runs above; the
 # staging-buffer gate pins the columnar delete path's absorption win.
 b = d["acceptance"]["staging_buffer_insert_speedup"]

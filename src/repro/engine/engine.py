@@ -22,6 +22,7 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 
 from ..core.gloran import GloranConfig
+from ..launch.mesh import shard_devices
 from ..lsm import LSMConfig, LSMTree
 from ..lsm.merge import merge_runs
 from ..obs import MetricsRegistry, span
@@ -32,6 +33,33 @@ from .router import ShardRouter
 from .stats import EngineStats, KernelCounters, merge_io_snapshots
 
 _EMPTY_KV = (np.zeros(0, np.uint64), np.zeros(0, np.uint64))
+
+
+def _resolve_devices(config: EngineConfig, num_shards: int) -> list | None:
+    """The per-shard home-device assignment, or None for the legacy
+    single-device path.
+
+    ``EngineConfig.devices`` wins; None defers to ``REPRO_ENGINE_DEVICES``
+    (same contract); unset = auto.  0 forces the ungated fallback.  Auto
+    keeps single-device hosts on the exact legacy path (no pinning at
+    all) and otherwise homes shards round-robin over up to ``num_shards``
+    devices; an explicit N pins over the first min(N, available) — N=1
+    included (pin everything to device 0), which is how the parity suite
+    exercises the device-count-1 matrix cell.
+    """
+    want = config.devices
+    if want is None:
+        env = os.environ.get("REPRO_ENGINE_DEVICES", "").strip()
+        want = int(env) if env else None
+    if want == 0:
+        return None
+    import jax
+    avail = len(jax.devices())
+    if want is None:
+        if avail <= 1:
+            return None
+        want = min(num_shards, avail)
+    return shard_devices(num_shards, limit=want)
 
 
 class Engine:
@@ -74,11 +102,18 @@ class Engine:
                                   partition=self.config.partition,
                                   universe=base.key_universe)
         self.planner = Planner(self.router)
+        # Per-shard home XLA devices (None = single-device legacy path):
+        # each shard's registry packs and kernel launches live on its
+        # device, so pipelined shard workers stop serializing on the
+        # default device.
+        self.devices = _resolve_devices(self.config, self.num_shards)
         self.shards = []
-        for _ in range(self.num_shards):
+        for s in range(self.num_shards):
             tree = LSMTree(base, strategy=strategy,
                            gloran_config=gloran_config)
-            self.shards.append(ShardExecutor(tree, self.config))
+            dev = self.devices[s] if self.devices is not None else None
+            self.shards.append(ShardExecutor(tree, self.config,
+                                             device=dev))
         self.stats_ = EngineStats()
         self.metrics = MetricsRegistry()
         pl = self.config.pipeline
@@ -285,17 +320,17 @@ class Engine:
 
     @property
     def kernel_counters(self) -> KernelCounters:
-        return KernelCounters(
-            sum(sh.kernels.interval_calls for sh in self.shards),
-            sum(sh.kernels.interval_queries for sh in self.shards),
-            sum(sh.kernels.bloom_calls for sh in self.shards),
-            sum(sh.kernels.bloom_queries for sh in self.shards),
-            sum(sh.kernels.merge_calls for sh in self.shards),
-            sum(sh.kernels.merge_keys for sh in self.shards),
-            sum(sh.kernels.cascade_calls for sh in self.shards),
-            sum(sh.kernels.cascade_queries for sh in self.shards),
-            sum(sh.kernels.cascade_packs for sh in self.shards),
-            sum(sh.kernels.upload_bytes for sh in self.shards))
+        out = KernelCounters()
+        for sh in self.shards:
+            out.merge(sh.kernels)
+        return out
+
+    def device_map(self) -> dict:
+        """shard id -> home device string ("host" when unpinned)."""
+        if self.devices is None:
+            return {s: "host" for s in range(self.num_shards)}
+        return {s: f"{d.platform}:{d.id}"
+                for s, d in enumerate(self.devices)}
 
     def cache_snapshot(self) -> dict:
         snaps = [sh.cache.snapshot() for sh in self.shards]
@@ -337,6 +372,11 @@ class Engine:
             "num_shards": self.num_shards,
             "partition": self.router.partition,
             "pipeline": self.pipeline_default,
+            "devices": {
+                "enabled": self.devices is not None,
+                "distinct": len(set(self.device_map().values())),
+                "per_shard": self.device_map(),
+            },
             "entries": self.num_entries,
             "engine": self.stats_.snapshot(),
             "io": merge_io_snapshots(
@@ -359,7 +399,8 @@ class Engine:
             "pipelined_batches": self.stats_.pipelined_batches,
             "serial_batches": self.stats_.serial_batches,
             "entries": out["entries"],
-            "num_shards": self.num_shards})
+            "num_shards": self.num_shards,
+            "devices": out["devices"]["distinct"]})
         if self.stats_.staging:
             m.absorb("staging", {k: v for k, v in
                                  self.stats_.staging.items()

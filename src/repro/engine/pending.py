@@ -84,10 +84,16 @@ class PendingBatch:
         """Block until executed + merged; safe to call repeatedly."""
         with self._lock:
             if not self._collected:
+                # Device-aware collect: the span records how many
+                # distinct devices served the batch, so a trace shows
+                # whether the merge-back actually waited on parallel
+                # devices or on one serialized default device.
+                devs = self.engine.device_map()
                 with span("engine.collect",
                           kind=self.plan.batch.kind_name,
                           batch=self.plan.seq,
-                          pipelined=self.pipeline):
+                          pipelined=self.pipeline,
+                          devices=len(set(devs.values()))):
                     self._collect()
                 self._collected = True
         return self
@@ -154,3 +160,9 @@ class PendingBatch:
     def shard_walls(self) -> dict[int, float]:
         """Per-shard busy seconds (populated after ``wait``)."""
         return dict(self._walls)
+
+    @property
+    def shard_devices(self) -> dict[int, str]:
+        """Home device per shard that executed this batch ("host" when
+        the engine runs the single-device fallback)."""
+        return {s: self.engine.device_map()[s] for s in self._walls}

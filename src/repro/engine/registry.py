@@ -125,18 +125,56 @@ class DeviceFilterRegistry:
     exact (level index, run uid, run length) tuple — process-unique uids
     make stale hits impossible after compaction — and the GLORAN half
     keys on the index epoch.  A changed key rebuilds only the changed
-    pieces (uploads are counted in the kernel counters' byte ledger) and
-    re-concats the rest on device.
+    pieces (uploads are counted in the kernel counters' byte ledger,
+    split per destination device) and re-concats the rest on device.
+
+    Multi-device: a registry built with ``device=`` commits every upload
+    to that shard's home XLA device and keys its caches on
+    ``(uid-or-epoch-identity, device)``; an epoch bump or compaction
+    therefore invalidates the piece on *every* device that cached it —
+    each shard's registry sees the same structural key move and rebuilds
+    its own copy.  ``device=None`` is the byte-identical legacy
+    single-device path (plain uncommitted uploads).
     """
 
-    def __init__(self, counters: KernelCounters | None = None):
+    def __init__(self, counters: KernelCounters | None = None,
+                 device=None):
         self.counters = counters if counters is not None else \
             KernelCounters()
-        self._runs: dict[int, _RunPiece] = {}        # sstable uid -> piece
-        self._gl: dict[int, _GlPiece] = {}           # id(level) -> piece
+        # The shard's home XLA device.  None = legacy single-device path:
+        # uploads are plain (uncommitted) jnp.asarray on the default
+        # device.  Set, every upload is jax.device_put-committed to it,
+        # so downstream jit dispatches run there (committed operands pin
+        # placement) — per-device jit, no cross-shard serialization on
+        # device 0.
+        self.device = device
+        self._dev_key = "host" if device is None else \
+            f"{device.platform}:{device.id}"
+        # Caches key on (uid-or-identity, device) per the invalidation
+        # contract: a piece is only reusable on the device it was
+        # committed to.  A registry serves one shard = one device, so
+        # the second component is constant here, but the explicit key
+        # keeps a piece from ever leaking across devices if a registry
+        # is shared or re-homed.
+        self._runs: dict[tuple, _RunPiece] = {}   # (uid, dev) -> piece
+        self._gl: dict[tuple, _GlPiece] = {}      # (id(level), dev) -> piece
         self._view: CascadeView | None = None
         self._view_key: tuple | None = None          # includes declines
         self._bloom_words: OrderedDict[int, jax.Array] = OrderedDict()
+
+    # ---------------------------------------------------------- placement
+    def _put(self, arr) -> jax.Array:
+        """Upload one host array: committed to the home device when one
+        is set, plain default-device upload otherwise (legacy path)."""
+        if self.device is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, self.device)
+
+    def _charge_upload(self, nbytes: int) -> None:
+        """Count host->device bytes in the total AND per-device ledger."""
+        self.counters.upload_bytes += nbytes
+        by_dev = self.counters.upload_bytes_by_device
+        by_dev[self._dev_key] = by_dev.get(self._dev_key, 0) + nbytes
 
     # ----------------------------------------------------------- packing
     def view(self, tree) -> CascadeView | None:
@@ -198,26 +236,30 @@ class DeviceFilterRegistry:
         slots = np.full(len(tree.levels), -1, np.int32)
         for col, (i, _) in enumerate(lvls):
             slots[i] = col
+        # Concats of committed pieces stay on the home device; the small
+        # offset/count vectors are _put there too so a cascade dispatch
+        # never mixes committed and default-device operands (placement
+        # stays pinned, no per-call host hops for the metadata arrays).
         state = CascadeState(
             lkeys=jnp.concatenate([p.keys for p in pieces]),
             lseqs=jnp.concatenate([p.seqs for p in pieces]),
-            key_off=jnp.asarray(
+            key_off=self._put(
                 np.cumsum([0] + key_pad[:-1]).astype(np.int32)),
-            key_cnt=jnp.asarray(np.array([p.n for p in pieces], np.int32)),
+            key_cnt=self._put(np.array([p.n for p in pieces], np.int32)),
             words=jnp.concatenate([p.words for p in pieces]),
-            word_off=jnp.asarray(
+            word_off=self._put(
                 np.cumsum([0] + word_pad[:-1]).astype(np.int32)),
-            mbits=jnp.asarray(
+            mbits=self._put(
                 np.array([p.m_bits for p in pieces], np.uint32)),
-            seeds=jnp.asarray(np.stack([p.seeds for p in pieces])),
+            seeds=self._put(np.stack([p.seeds for p in pieces])),
             glo_lo=self._gl_cat(gl_pieces, "lo"),
             glo_hi=self._gl_cat(gl_pieces, "hi"),
             glo_smin=self._gl_cat(gl_pieces, "smin"),
             glo_smax=self._gl_cat(gl_pieces, "smax"),
-            gl_off=jnp.asarray(
+            gl_off=self._put(
                 np.cumsum([0] + gl_pad[:-1]).astype(np.int32)
                 if gl_pieces else np.zeros(0, np.int32)),
-            gl_cnt=jnp.asarray(
+            gl_cnt=self._put(
                 np.array([p.n for p in gl_pieces], np.int32)),
             L=len(pieces), H=H, G=len(gl_pieces),
             steps_keys=_steps(max(key_pad)),
@@ -228,17 +270,18 @@ class DeviceFilterRegistry:
         return CascadeView(state=state, slots=slots,
                            has_gloran=gl_levels is not None)
 
-    @staticmethod
-    def _gl_cat(pieces: list[_GlPiece], field: str) -> jax.Array:
+    def _gl_cat(self, pieces: list[_GlPiece], field: str) -> jax.Array:
         if not pieces:
-            return jnp.zeros(1, jnp.uint32)  # G=0: placeholder operand
+            # G=0: placeholder operand (committed home-side like the rest)
+            return self._put(np.zeros(1, np.uint32))
         return jnp.concatenate([getattr(p, field) for p in pieces])
 
     def _run_piece(self, lvl) -> _RunPiece:
-        piece = self._runs.get(lvl.uid)
+        piece = self._runs.get((lvl.uid, self._dev_key))
         if piece is not None and piece.sstable is lvl:
             return piece
-        with span("registry.upload_run", uid=lvl.uid, entries=len(lvl)):
+        with span("registry.upload_run", uid=lvl.uid, entries=len(lvl),
+                  device=self._dev_key):
             n = len(lvl)
             pad = _next_pow2(n)
             keys = np.full(pad, _U32_LIMIT, np.uint32)
@@ -249,26 +292,26 @@ class DeviceFilterRegistry:
             wpad = _next_pow2(len(bb.words))
             words = np.zeros(wpad, np.uint32)
             words[:len(bb.words)] = bb.words
-            piece = _RunPiece(sstable=lvl, keys=jnp.asarray(keys),
-                              seqs=jnp.asarray(seqs),
-                              words=jnp.asarray(words),
+            piece = _RunPiece(sstable=lvl, keys=self._put(keys),
+                              seqs=self._put(seqs),
+                              words=self._put(words),
                               n=n, m_bits=bb.m_bits, seeds=bb.seeds)
-            self.counters.upload_bytes += \
-                keys.nbytes + seqs.nbytes + words.nbytes
-            self._runs[lvl.uid] = piece
+            self._charge_upload(keys.nbytes + seqs.nbytes + words.nbytes)
+            self._runs[(lvl.uid, self._dev_key)] = piece
         return piece
 
     def _gl_piece(self, lvl) -> _GlPiece:
-        piece = self._gl.get(id(lvl))
+        piece = self._gl.get((id(lvl), self._dev_key))
         if piece is not None and piece.level is lvl:
             return piece
-        with span("registry.upload_gl", areas=len(lvl.areas)):
+        with span("registry.upload_gl", areas=len(lvl.areas),
+                  device=self._dev_key):
             lo, hi, smin, smax, n = clamp_level_u32(lvl.areas)
-            piece = _GlPiece(level=lvl, lo=jnp.asarray(lo),
-                             hi=jnp.asarray(hi), smin=jnp.asarray(smin),
-                             smax=jnp.asarray(smax), n=n)
-            self.counters.upload_bytes += 4 * lo.nbytes
-            self._gl[id(lvl)] = piece
+            piece = _GlPiece(level=lvl, lo=self._put(lo),
+                             hi=self._put(hi), smin=self._put(smin),
+                             smax=self._put(smax), n=n)
+            self._charge_upload(4 * lo.nbytes)
+            self._gl[(id(lvl), self._dev_key)] = piece
         return piece
 
     def _evict(self, tree, gl_levels) -> None:
@@ -276,13 +319,14 @@ class DeviceFilterRegistry:
         copies (and the objects they pin) don't linger."""
         live = {lvl.uid for lvl in tree.levels
                 if lvl is not None and len(lvl)}
-        self._runs = {uid: p for uid, p in self._runs.items()
-                      if uid in live}
+        self._runs = {k: p for k, p in self._runs.items()
+                      if k[0] in live}
         for uid in [u for u in self._bloom_words if u not in live]:
             del self._bloom_words[uid]
         if gl_levels is not None:
             alive = {id(g) for g in gl_levels}
-            self._gl = {k: p for k, p in self._gl.items() if k in alive}
+            self._gl = {k: p for k, p in self._gl.items()
+                        if k[0] in alive}
 
     # -------------------------------------------- per-level device state
     def gl_columns(self, lvl, live) -> tuple:
@@ -294,8 +338,9 @@ class DeviceFilterRegistry:
         levels are pruned against it (cascade-off engines never call
         ``view()``, so eviction must happen here too)."""
         alive = {id(g) for g in live}
-        if any(k not in alive for k in self._gl):
-            self._gl = {k: p for k, p in self._gl.items() if k in alive}
+        if any(k[0] not in alive for k in self._gl):
+            self._gl = {k: p for k, p in self._gl.items()
+                        if k[0] in alive}
         p = self._gl_piece(lvl)
         return p.lo, p.hi, p.smin, p.smax
 
@@ -305,15 +350,15 @@ class DeviceFilterRegistry:
         the cascade piece when one exists, else from a small LRU.
         Run uids are process-unique and never recycled, so a uid hit
         can never be stale; only the words are stored (no run pin)."""
-        piece = self._runs.get(lvl.uid)
+        piece = self._runs.get((lvl.uid, self._dev_key))
         if piece is not None and piece.sstable is lvl:
             return piece.words  # pow2-padded: positions never reach pad
         words = self._bloom_words.get(lvl.uid)
         if words is not None:
             self._bloom_words.move_to_end(lvl.uid)
             return words
-        words = jnp.asarray(lvl.bloom.words)
-        self.counters.upload_bytes += lvl.bloom.words.nbytes
+        words = self._put(lvl.bloom.words)
+        self._charge_upload(lvl.bloom.words.nbytes)
         self._bloom_words[lvl.uid] = words
         if len(self._bloom_words) > 128:
             self._bloom_words.popitem(last=False)

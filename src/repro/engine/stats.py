@@ -27,6 +27,27 @@ class KernelCounters:
     cascade_queries: int = 0    # lookups answered by the cascade
     cascade_packs: int = 0      # registry device-state (re)packs
     upload_bytes: int = 0       # host->device bytes moved by the packs
+    # upload_bytes split by destination device ("cpu:0", ... — "host"
+    # when packs stay on the default device): the per-device ledger the
+    # multi-device registry charges, so steady-state "uploaded once per
+    # device, not once per batch" is assertable per device.
+    upload_bytes_by_device: dict = field(default_factory=dict)
+
+    def merge(self, other: "KernelCounters") -> None:
+        """Accumulate another ledger into this one (fleet rollups)."""
+        self.interval_calls += other.interval_calls
+        self.interval_queries += other.interval_queries
+        self.bloom_calls += other.bloom_calls
+        self.bloom_queries += other.bloom_queries
+        self.merge_calls += other.merge_calls
+        self.merge_keys += other.merge_keys
+        self.cascade_calls += other.cascade_calls
+        self.cascade_queries += other.cascade_queries
+        self.cascade_packs += other.cascade_packs
+        self.upload_bytes += other.upload_bytes
+        for dev, nbytes in other.upload_bytes_by_device.items():
+            self.upload_bytes_by_device[dev] = \
+                self.upload_bytes_by_device.get(dev, 0) + nbytes
 
     def snapshot(self) -> dict:
         return {
@@ -40,6 +61,8 @@ class KernelCounters:
             "cascade_queries": self.cascade_queries,
             "cascade_packs": self.cascade_packs,
             "upload_bytes": self.upload_bytes,
+            "upload_bytes_by_device": dict(sorted(
+                self.upload_bytes_by_device.items())),
         }
 
 

@@ -29,21 +29,29 @@ def _default_interpret() -> bool:
 
 
 def bloom_probe(keys32, words, *, m_bits: int, seeds: tuple[int, ...],
-                block_rows: int = 8, interpret: bool | None = None):
+                block_rows: int = 8, interpret: bool | None = None,
+                device=None):
     """Batched Bloom probe: returns bool (n,) for uint32 folded keys.
 
     keys32: (n,) uint32; words: (n_words,) uint32 bit array; m_bits: filter
-    size in bits; seeds: per-hash 32-bit seeds.
+    size in bits; seeds: per-hash 32-bit seeds.  ``device`` commits the
+    query upload to one XLA device (pre-uploaded registry words are
+    committed there already), pinning the launch per shard.
     """
     with span("kernel.bloom", n=int(np.shape(keys32)[0])):
         return _bloom_probe(keys32, words, m_bits=m_bits, seeds=seeds,
-                            block_rows=block_rows, interpret=interpret)
+                            block_rows=block_rows, interpret=interpret,
+                            device=device)
 
 
-def _bloom_probe(keys32, words, *, m_bits, seeds, block_rows, interpret):
+def _bloom_probe(keys32, words, *, m_bits, seeds, block_rows, interpret,
+                 device):
     if interpret is None:
         interpret = _default_interpret()
-    keys32 = jnp.asarray(keys32, dtype=jnp.uint32)
+    if device is not None:
+        keys32 = jax.device_put(np.asarray(keys32, np.uint32), device)
+    else:
+        keys32 = jnp.asarray(keys32, dtype=jnp.uint32)
     # Pre-uploaded device words (e.g. the engine registry's per-run
     # copies) pass through untouched: no host->device copy per probe.
     if not isinstance(words, jax.Array):

@@ -85,7 +85,7 @@ _cascade_xla = jax.jit(cascade_flat, static_argnames=(
 
 def cascade_lookup(qkey32, qhash32, qseq32, qres, state: CascadeState, *,
                    block_rows: int = 8, interpret: bool | None = None,
-                   compiled: bool | None = False):
+                   compiled: bool | None = False, device=None):
     """One fused launch for a batch of point lookups.
 
     qkey32: (n,) uint32 exact keys (u32-gated by the caller); qhash32:
@@ -94,7 +94,10 @@ def cascade_lookup(qkey32, qhash32, qseq32, qres, state: CascadeState, *,
 
     ``compiled=None`` auto-selects the dispatch: the jit'd XLA form
     off-TPU (the compiled artifact CPU CI exercises), the Pallas kernel
-    on TPU.
+    on TPU.  ``device`` commits the query tiles to one XLA device so
+    the launch runs there (the state arrays are committed by the
+    registry; committed operands pin placement) — per-shard device
+    execution without a per-call transfer of the packed state.
 
     Returns numpy ``(maybe, hit, gl_cov, pos)``: (n, L) bool Bloom and
     exact-match verdicts per level, (n, G) bool GLORAN per-level
@@ -105,11 +108,11 @@ def cascade_lookup(qkey32, qhash32, qseq32, qres, state: CascadeState, *,
               gl_levels=state.G):
         return _cascade_lookup(qkey32, qhash32, qseq32, qres, state,
                                block_rows=block_rows, interpret=interpret,
-                               compiled=compiled)
+                               compiled=compiled, device=device)
 
 
 def _cascade_lookup(qkey32, qhash32, qseq32, qres, state, *,
-                    block_rows, interpret, compiled):
+                    block_rows, interpret, compiled, device):
     if compiled is None:
         compiled = _default_interpret()
     if interpret is None:
@@ -125,6 +128,9 @@ def _cascade_lookup(qkey32, qhash32, qseq32, qres, state, *,
     qh[:n] = qhash32
     qs[:n] = qseq32
     qr[:n] = np.asarray(qres, bool)[:n]
+    if device is not None:
+        qk, qh, qs, qr = (jax.device_put(q, device)
+                          for q in (qk, qh, qs, qr))
     st = state
     if compiled:
         bloom, hit, gl, pos = _cascade_xla(

@@ -22,20 +22,30 @@ def _default_interpret() -> bool:
 
 
 def interval_query(keys32, seqs32, lo, hi, smin, smax, *,
-                   block_rows: int = 8, interpret: bool | None = None):
-    """Returns bool (n,): is (key, seq) covered by the disjoint level?"""
+                   block_rows: int = 8, interpret: bool | None = None,
+                   device=None):
+    """Returns bool (n,): is (key, seq) covered by the disjoint level?
+
+    ``device`` commits the query upload to one XLA device (pre-uploaded
+    level columns are committed there already), pinning the launch per
+    shard."""
     with span("kernel.interval", n=int(np.shape(keys32)[0]),
               areas=int(np.shape(lo)[0])):
         return _interval_query(keys32, seqs32, lo, hi, smin, smax,
-                               block_rows=block_rows, interpret=interpret)
+                               block_rows=block_rows, interpret=interpret,
+                               device=device)
 
 
 def _interval_query(keys32, seqs32, lo, hi, smin, smax, *,
-                    block_rows, interpret):
+                    block_rows, interpret, device):
     if interpret is None:
         interpret = _default_interpret()
-    keys32 = jnp.asarray(keys32, jnp.uint32)
-    seqs32 = jnp.asarray(seqs32, jnp.uint32)
+    if device is not None:
+        keys32 = jax.device_put(np.asarray(keys32, np.uint32), device)
+        seqs32 = jax.device_put(np.asarray(seqs32, np.uint32), device)
+    else:
+        keys32 = jnp.asarray(keys32, jnp.uint32)
+        seqs32 = jnp.asarray(seqs32, jnp.uint32)
     # Pre-uploaded device columns (the executor's cached u32 level
     # views) pass through untouched: no host->device copy per probe.
     as_dev = lambda a: a if isinstance(a, jax.Array) else \

@@ -31,10 +31,22 @@ def _default_interpret() -> bool:
 _merge_ranks_xla = jax.jit(merge_ranks_ref)
 
 
+def _as_dev(arr, device, dtype=jnp.uint32):
+    """Upload one operand, committed to ``device`` when one is given.
+
+    Merge rounds have no persistent device-resident state (both runs
+    arrive as host numpy every call), so unlike the filter kernels the
+    merge path strictly needs explicit placement to run per shard —
+    uncommitted uploads would all land on the default device."""
+    if device is not None:
+        return jax.device_put(np.asarray(arr, np.uint32), device)
+    return jnp.asarray(arr, dtype)
+
+
 def _rank(queries: np.ndarray, arr: np.ndarray, *, leq: bool,
-          block_rows: int, interpret: bool) -> np.ndarray:
+          block_rows: int, interpret: bool, device) -> np.ndarray:
     """Counts of ``arr`` elements preceding each query (chunk-summed)."""
-    q32 = jnp.asarray(queries, jnp.uint32)
+    q32 = _as_dev(queries, device)
     n = q32.shape[0]
     tile = block_rows * LANES
     n_pad = -n % tile
@@ -44,14 +56,14 @@ def _rank(queries: np.ndarray, arr: np.ndarray, *, leq: bool,
     for a0 in range(0, m, MAX_KEYS_PER_CALL):
         a1 = min(m, a0 + MAX_KEYS_PER_CALL)
         total = total + merge_rank_pallas(
-            q, jnp.asarray(arr[a0:a1], jnp.uint32), leq=leq,
+            q, _as_dev(arr[a0:a1], device), leq=leq,
             block_rows=block_rows, interpret=interpret)
     return np.asarray(total).reshape(-1)[:n]
 
 
 def merge_ranks(ka: np.ndarray, kb: np.ndarray, *, block_rows: int = 8,
                 interpret: bool | None = None,
-                compiled: bool = False):
+                compiled: bool = False, device=None):
     """Merged-output positions of two key-sorted uint32 runs.
 
     Returns ``(pa, pb)`` int64 numpy arrays: ``pa[i]`` is the slot of
@@ -61,26 +73,29 @@ def merge_ranks(ka: np.ndarray, kb: np.ndarray, *, block_rows: int = 8,
 
     ``compiled=True`` routes through the jit'd XLA path instead of the
     Pallas kernel; the default Pallas path interprets off-TPU.
+    ``device`` commits both runs to one XLA device so the launch runs
+    there (per-shard placement).
     """
     ka = np.asarray(ka)
     kb = np.asarray(kb)
     with span("kernel.merge", n=len(ka) + len(kb)):
         return _merge_ranks(ka, kb, block_rows=block_rows,
-                            interpret=interpret, compiled=compiled)
+                            interpret=interpret, compiled=compiled,
+                            device=device)
 
 
-def _merge_ranks(ka, kb, *, block_rows, interpret, compiled):
+def _merge_ranks(ka, kb, *, block_rows, interpret, compiled, device):
     na, nb = len(ka), len(kb)
     if interpret is None:
         interpret = _default_interpret()
     if compiled:
-        pa, pb = _merge_ranks_xla(jnp.asarray(ka, jnp.uint32),
-                                  jnp.asarray(kb, jnp.uint32))
+        pa, pb = _merge_ranks_xla(_as_dev(ka, device),
+                                  _as_dev(kb, device))
         return (np.asarray(pa).astype(np.int64),
                 np.asarray(pb).astype(np.int64))
     ra = _rank(ka, kb, leq=False, block_rows=block_rows,
-               interpret=interpret)
+               interpret=interpret, device=device)
     rb = _rank(kb, ka, leq=True, block_rows=block_rows,
-               interpret=interpret)
+               interpret=interpret, device=device)
     return (np.arange(na, dtype=np.int64) + ra,
             np.arange(nb, dtype=np.int64) + rb)

@@ -1,6 +1,9 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import: jax locks the device count at first init.
+from .mesh import ensure_host_devices
+ensure_host_devices(512)
+# ^ MUST precede jax backend init: jax locks the device count at first
+# client creation (importing jax is fine — backends are lazy).  Routed
+# through the shared helper so an XLA_FLAGS count already forced by the
+# environment (e.g. an engine run's 4) is respected, never overwritten.
 # This is dry-run only — smoke tests and benchmarks see the 1 real device.
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.

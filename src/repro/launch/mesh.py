@@ -1,19 +1,85 @@
-"""Production mesh factories.
+"""Production mesh factories + host-platform device placement helpers.
 
-A FUNCTION, not a module-level constant: importing this module never
-touches jax device state (critical — smoke tests must see 1 CPU device
-while the dry-run forces 512 host-platform devices via XLA_FLAGS before
-any jax import).
+Everything here is a FUNCTION, not a module-level constant: importing
+this module never touches jax device state (critical — smoke tests must
+see 1 CPU device while the dry-run forces 512 host-platform devices via
+XLA_FLAGS before any jax import).
 
 Target: TPU v5e pods.  Single pod = 16x16 = 256 chips, axes
 ('data', 'model'); multi-pod = 2 x 16 x 16 = 512 chips with a leading
 'pod' axis (data-parallel across pods over DCI, model/data parallel over
 ICI within a pod).
+
+Device placement for the sharded engine lives here too:
+``ensure_host_devices(n)`` requests n host-platform XLA devices on CPU
+hosts (a no-op when XLA_FLAGS already forces a count — callers can't
+fight over it) and ``shard_devices(n)`` maps n engine shards round-robin
+onto the devices that actually materialized.
 """
 
 from __future__ import annotations
 
+import os
+import sys
+
 import jax
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def forced_host_device_count() -> int | None:
+    """The device count XLA_FLAGS already forces, or None."""
+    for tok in os.environ.get("XLA_FLAGS", "").split():
+        if tok.startswith(_FORCE_FLAG + "="):
+            try:
+                return int(tok.split("=", 1)[1])
+            except ValueError:
+                return None
+    return None
+
+
+def _backends_initialized() -> bool:
+    """True once jax has created its XLA clients (the point after which
+    the host-platform device count is locked for the process)."""
+    if "jax" not in sys.modules:
+        return False
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge.backends_are_initialized())
+    except Exception:  # pragma: no cover - old jax: assume locked
+        return True
+
+
+def ensure_host_devices(n: int) -> int:
+    """Request ``n`` host-platform XLA devices (CPU hosts).
+
+    Must run before jax's backends initialize — XLA locks the count at
+    client creation.  An existing forced count in XLA_FLAGS is respected
+    (never overwritten, so e.g. the dry-run's 512 and an engine's 4
+    can't fight; first setting wins) and any other XLA_FLAGS content is
+    preserved.  Returns the count that is (or will be) in effect.
+    """
+    existing = forced_host_device_count()
+    if existing is not None:
+        return existing
+    if _backends_initialized():
+        return len(jax.devices())  # too late to force: report reality
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = \
+        (flags + " " if flags else "") + f"{_FORCE_FLAG}={int(n)}"
+    return int(n)
+
+
+def shard_devices(n: int, limit: int | None = None) -> list:
+    """Home devices for ``n`` engine shards: round-robin over the default
+    backend's devices (initializes jax backends — call
+    ``ensure_host_devices`` first on CPU hosts that want more than one).
+    ``limit`` restricts the pool to the first ``limit`` devices.
+    """
+    devs = jax.devices()
+    if limit is not None:
+        devs = devs[:max(1, min(int(limit), len(devs)))]
+    return [devs[i % len(devs)] for i in range(int(n))]
 
 
 def make_mesh_compat(shape, axes):

@@ -1,0 +1,23 @@
+"""Shared test bootstrap: force 4 host-platform XLA devices.
+
+pytest imports conftest before any test module, so this runs before
+jax's backends initialize — the only window in which the CPU device
+count can be set (XLA locks it at first client creation).  Routed
+through ``ensure_host_devices`` so an XLA_FLAGS count already forced by
+the environment (the CI matrix exports one explicitly) is respected,
+never overwritten.
+
+With 4 devices available, the device-matrix parity suite
+(tests/test_devices.py) can pin engines to 1/2/4 distinct devices in
+one process, and every multi-shard engine test exercises per-shard
+device placement by default (REPRO_ENGINE_DEVICES=0 in the environment
+still forces the single-device fallback — one CI axis does exactly
+that).
+"""
+
+import os
+
+from repro.launch.mesh import ensure_host_devices
+
+TEST_HOST_DEVICES = int(os.environ.get("REPRO_TEST_HOST_DEVICES", "4"))
+ensure_host_devices(TEST_HOST_DEVICES)
