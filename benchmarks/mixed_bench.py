@@ -428,6 +428,84 @@ def bench_buffer_insert() -> dict:
     return out
 
 
+def bench_wal_overhead() -> dict:
+    """Durability cost: put-heavy mixed throughput, WAL on vs off.
+
+    The same deterministic batch stream (puts with periodic range
+    deletes, fresh store both sides so flush points match exactly) runs
+    through a no-WAL engine and a WAL engine with group commit +
+    ``fsync="batch"`` — the strongest policy, one fsync per submitted
+    shard plan.  Interleaved reps, median-of-medians ratio; the
+    acceptance gate holds it under 1.25x.
+    """
+    import shutil
+    import tempfile
+
+    rng = np.random.default_rng(17)
+    # No smoke reduction: the stream must be long enough to amortize
+    # per-stream fixed costs (first-segment creation, warmup batches),
+    # or the ratio measures those instead of the steady-state fsync
+    # cost.  Full size is ~2 s — cheap enough for check.sh.
+    n_batches = 12
+    batches = []
+    for i in range(n_batches):
+        keys = rng.integers(0, UNIVERSE, size=BATCH).astype(np.uint64)
+        batches.append(OpBatch.puts(keys, keys + np.uint64(1)))
+        if i % 3 == 2:
+            lo = int(rng.integers(0, UNIVERSE - RDEL_LEN - 1))
+            batches.append(OpBatch.range_deletes([(lo, lo + RDEL_LEN)]))
+
+    def one_pass(wal_dir: str | None) -> tuple[float, dict | None]:
+        cfg = EngineConfig(partition="range", pipeline=False, devices=0,
+                           wal_dir=wal_dir, fsync="batch")
+        eng = Engine(num_shards=2, strategy="gloran",
+                     lsm_config=lsm_cfg(), gloran_config=gloran_cfg(),
+                     config=cfg)
+        t0 = time.perf_counter()
+        for b in batches:
+            eng.submit(b, pipeline=False).wait()
+        wall = time.perf_counter() - t0
+        wal = (eng.stats().get("wal") if wal_dir is not None else None)
+        eng.close()
+        return wall, wal
+
+    walls: dict = {"none": [], "wal": []}
+    wal_counters = None
+    reps = max(REPS, 3)
+    for _ in range(reps):
+        for mode in ("none", "wal"):
+            tmp = (tempfile.mkdtemp(prefix="repro-walbench-")
+                   if mode == "wal" else None)
+            try:
+                wall, counters = one_pass(tmp)
+            finally:
+                if tmp is not None:
+                    shutil.rmtree(tmp, ignore_errors=True)
+            walls[mode].append(wall)
+            if counters is not None:
+                wal_counters = counters
+    nw = float(np.median(walls["none"]))
+    ww = float(np.median(walls["wal"]))
+    n_ops = sum(len(b) for b in batches)
+    out = {
+        "ops": n_ops,
+        "reps": reps,
+        "fsync": "batch",
+        "nowal_wall_seconds": round(nw, 4),
+        "wal_wall_seconds": round(ww, 4),
+        "nowal_ops_per_sec": round(n_ops / nw),
+        "wal_ops_per_sec": round(n_ops / ww),
+        "overhead_ratio": round(ww / nw, 3),
+        "wal_bytes": wal_counters["bytes"],
+        "wal_fsyncs": wal_counters["fsyncs"],
+        "wal_frames": wal_counters["frames"],
+    }
+    print(f"# wal overhead: {nw:.3f}s -> {ww:.3f}s "
+          f"({out['overhead_ratio']}x, {out['wal_fsyncs']} fsyncs, "
+          f"{out['wal_bytes'] / 1e6:.1f} MB logged)", flush=True)
+    return out
+
+
 def export_trace(path: str, shards: int = 4) -> dict:
     """One traced {shards}-shard pipelined mixed pass -> Chrome trace.
 
@@ -481,6 +559,7 @@ def run() -> dict:
     timed_rows = [r for r in rows if r["shards"] >= 2
                   and r.get("wall_speedup") is not None]
     buf = bench_buffer_insert()
+    wal = bench_wal_overhead()
     result = {
         "config": {
             "preload_entries": PRELOAD,
@@ -502,7 +581,11 @@ def run() -> dict:
         },
         "rows": rows,
         "buffer_insert": buf,
+        "wal": wal,
         "acceptance": {
+            # Durability gate: put-heavy throughput with group-commit
+            # WAL (fsync per submitted batch) within 1.25x of no-WAL.
+            "wal_overhead": wal["overhead_ratio"],
             # Delete-path refactor: columnar staging buffer vs the
             # per-record R-tree write buffer, same stream + flush points.
             "staging_buffer_insert_speedup": buf["speedup"],

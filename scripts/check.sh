@@ -77,7 +77,36 @@ lat = next(r["batch_latency_us"] for r in d["rows"] if r["pipeline"])
 assert lat and all({"p50_us", "p95_us", "p99_us"} <= set(h)
                    for h in lat.values()), \
     "engine.stats latency percentiles missing from mixed-bench rows"
+# Durability gate: group-commit WAL (fsync="batch") must keep a
+# put-heavy stream within 1.25x of the no-WAL wall.
+w = d["acceptance"]["wal_overhead"]
+assert w is not None and w <= 1.25, \
+    f"WAL overhead regressed: {w}x > 1.25x vs no-WAL put-heavy stream"
+print(f"check OK: group-commit WAL overhead {w}x <= 1.25x")
 EOF
+
+# Durability: cold-start recovery smoke.  Each row round-trips a store
+# through close -> recover() and verifies gets/scans/level shapes
+# against the original; the snapshot rows additionally exercise
+# take_snapshot + WAL-tail-only replay.
+REPRO_RECOVERY_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_engine_smoke.json \
+    python benchmarks/recovery_bench.py
+
+python - <<'EOF'
+import json
+d = json.load(open("/tmp/BENCH_engine_smoke.json"))
+r = d["recovery"]
+assert r["verified"], "recovery rows were not verified against originals"
+snap = [x for x in r["rows"] if x["snapshot"]]
+assert snap and all(x["snapshot_loaded"] for x in snap), \
+    "snapshot fast path did not engage on the snapshot rows"
+print(f"check OK: recovery verified on {len(r['rows'])} rows, "
+      f"max wall {r['max_recovery_wall_s']}s, snapshot fast path used")
+EOF
+
+# Durability: real SIGKILL mid-stream, then recover + verify the acked
+# prefix against the seeded oracle envelope.
+python scripts/kill_and_recover.py
 
 REPRO_OBS_BENCH_SMOKE=1 REPRO_BENCH_OUT=/tmp/BENCH_obs_smoke.json \
     python benchmarks/obs_overhead.py

@@ -23,11 +23,17 @@ from __future__ import annotations
 import json
 import os
 import queue
-import shutil
 import threading
 
 import jax
 import numpy as np
+
+# Atomic-publication discipline shared with the durability subsystem
+# (level manifest, store snapshots) — one implementation, three users.
+from ..durable.atomic import (atomic_publish_dir, clear_stale_tmp,
+                              keep_last_k, list_versions, versioned_name)
+
+_PREFIX = "step_"
 
 
 def _flatten_with_paths(tree):
@@ -82,10 +88,9 @@ class CheckpointManager:
 
     def _write(self, job):
         step, leaves, extra = job
-        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
-        final = os.path.join(self.dir, f"step_{step:08d}")
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
+        final = os.path.join(self.dir, versioned_name(_PREFIX, step))
+        tmp = final + ".tmp"
+        clear_stale_tmp(tmp)
         os.makedirs(tmp)
         arrays = {f"a{i}": v for i, (_, v) in enumerate(leaves)}
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
@@ -96,27 +101,12 @@ class CheckpointManager:
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)  # atomic publish
-        self._gc()
-
-    def _gc(self):
-        steps = sorted(self.list_steps())
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+        atomic_publish_dir(tmp, final)
+        keep_last_k(self.dir, _PREFIX, self.keep)
 
     # ------------------------------------------------------------- restore
     def list_steps(self) -> list[int]:
-        out = []
-        for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                try:
-                    out.append(int(name.split("_")[1]))
-                except ValueError:
-                    pass
-        return sorted(out)
+        return list_versions(self.dir, _PREFIX)
 
     def latest_step(self) -> int | None:
         steps = self.list_steps()

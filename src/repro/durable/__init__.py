@@ -1,0 +1,39 @@
+"""Durability subsystem: columnar WAL, level manifest, snapshots,
+crash-consistent recovery.
+
+Turn it on by pointing ``EngineConfig.wal_dir`` at a directory; reopen
+the directory after a crash (or clean ``close()``) with ``recover``::
+
+    cfg = EngineConfig(wal_dir="/data/store", fsync="batch")
+    with Engine(4, config=cfg) as eng:
+        eng.put_batch(keys, vals)          # acked only after WAL append
+    eng = recover("/data/store")           # byte-identical store
+
+See ``docs/DURABILITY.md`` for the frame format, fsync policies, and
+the recovery sequence.
+"""
+
+from .atomic import (atomic_publish_dir, atomic_write_bytes,
+                     atomic_write_json, clear_stale_tmp, fsync_dir,
+                     keep_last_k, list_versions, versioned_name)
+from .manifest import (LevelManifest, configs_from_doc, describe_tree,
+                       engine_config_doc, structure_fingerprint)
+from .recovery import recover, replay_frame
+from .snapshot import (latest_snapshot, load_snapshot, save_snapshot,
+                       take_snapshot)
+from .wal import (FRAME_BATCH, FRAME_FLUSH, FSYNC_POLICIES, WalFrame,
+                  WalReader, WalWriter, decode_payload, encode_frame,
+                  wal_has_frames, wal_shards)
+
+__all__ = [
+    "atomic_publish_dir", "atomic_write_bytes", "atomic_write_json",
+    "clear_stale_tmp", "fsync_dir", "keep_last_k", "list_versions",
+    "versioned_name",
+    "LevelManifest", "configs_from_doc", "describe_tree",
+    "engine_config_doc", "structure_fingerprint",
+    "recover", "replay_frame",
+    "latest_snapshot", "load_snapshot", "save_snapshot", "take_snapshot",
+    "FRAME_BATCH", "FRAME_FLUSH", "FSYNC_POLICIES", "WalFrame",
+    "WalReader", "WalWriter", "decode_payload", "encode_frame",
+    "wal_has_frames", "wal_shards",
+]

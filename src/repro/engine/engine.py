@@ -123,6 +123,48 @@ class Engine:
         self._pools: list[ThreadPoolExecutor] | None = None
         self._inflight: list[PendingBatch] = []
         self._inflight_lock = threading.Lock()
+        # Durability (repro.durable): a configured wal_dir attaches a
+        # per-shard WAL stream + the level manifest.  A directory that
+        # already holds acknowledged frames is refused — recovery must
+        # fold them in first, or acked writes would be silently orphaned.
+        self.wal_dir: str | None = None
+        self.manifest = None
+        self.recovery = {"wall_s": 0.0, "frames_replayed": 0,
+                         "snapshot_loaded": 0}
+        if self.config.wal_dir:
+            from ..durable.wal import wal_has_frames
+            if wal_has_frames(self.config.wal_dir):
+                raise RuntimeError(
+                    f"WAL at {self.config.wal_dir} holds acknowledged "
+                    "frames; open it with repro.durable.recover() "
+                    "instead of a fresh Engine")
+            self._attach_durability(self.config.wal_dir)
+
+    def _attach_durability(self, wal_dir: str, *, manifest=None,
+                           writers: list | None = None) -> None:
+        """Wire WAL writers + manifest into every shard.  Called from
+        ``__init__`` for a fresh store and from ``repro.durable.recover``
+        after replay (which passes the loaded manifest and writers
+        positioned at the durable tail)."""
+        from ..durable.manifest import LevelManifest, engine_config_doc
+        from ..durable.wal import WalWriter
+        self.wal_dir = wal_dir
+        if manifest is None:
+            # Routine structure commits skip fsync (not load-bearing —
+            # recovery replays the WAL); the initial commit carries the
+            # config doc recovery rebuilds the engine from, so THAT one
+            # is made durable explicitly.
+            manifest = LevelManifest(
+                os.path.join(wal_dir, "manifest"),
+                config=engine_config_doc(self), fsync=False)
+            manifest.commit(fsync=self.config.fsync != "never")
+        self.manifest = manifest
+        for s, sh in enumerate(self.shards):
+            w = (writers[s] if writers is not None else
+                 WalWriter(wal_dir, s,
+                           segment_bytes=self.config.wal_segment_bytes,
+                           fsync=self.config.fsync))
+            sh.attach_durability(w, manifest, s)
 
     # -------------------------------------------------- submit / collect
     def submit(self, batch: OpBatch, *,
@@ -235,10 +277,31 @@ class Engine:
         self.submit(OpBatch.range_deletes(ranges)).wait()
 
     def flush(self) -> None:
-        """Flush every shard's memtable to its level 0 (drains first)."""
+        """Flush every shard's memtable to its level 0 (drains first).
+        Durable shards log a FLUSH marker + manifest edit each."""
         self.drain()
         for sh in self.shards:
             sh.flush()
+
+    def close(self) -> None:
+        """Deterministic shutdown (idempotent): drain in-flight batches,
+        join the per-shard worker pools, and flush + fsync + close every
+        WAL stream — tests and benches never leak worker threads or
+        half-written segments."""
+        self.drain()
+        if self._pools is not None:
+            for p in self._pools:
+                p.shutdown(wait=True)
+            self._pools = None
+        for sh in self.shards:
+            if sh.wal is not None:
+                sh.wal.close()
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------- reads
     def get_batch(self, keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -405,5 +468,14 @@ class Engine:
             m.absorb("staging", {k: v for k, v in
                                  self.stats_.staging.items()
                                  if k != "per_shard"})
+        wals = [sh.wal for sh in self.shards if sh.wal is not None]
+        if wals:
+            agg: dict = {}
+            for w in wals:
+                for k, v in w.counters().items():
+                    agg[k] = agg.get(k, 0) + v
+            out["wal"] = agg
+            m.absorb("wal", agg)
+        m.absorb("recovery", self.recovery)
         out["metrics"] = m.snapshot()
         return out

@@ -56,12 +56,16 @@ from ..kernels.merge.ops import merge_ranks
 from ..lsm.tree import CascadeVerdict, LSMTree
 from ..obs import span
 from .cache import BlockCache
-from .plan import (KIND_NAMES, OP_DELETE, OP_GET, OP_PUT, OP_RANGE_SCAN,
-                   ShardPlan)
+from .plan import (KIND_NAMES, OP_DELETE, OP_GET, OP_PUT, OP_RANGE_DELETE,
+                   OP_RANGE_SCAN, ShardPlan)
 # _U32_LIMIT / _next_pow2 are shared with the registry: both kernel
 # paths must gate and pad identically for cascade parity to hold.
 from .registry import DeviceFilterRegistry, _next_pow2, _U32_LIMIT
 from .stats import KernelCounters
+# Submodule import (not the package) keeps the engine <-> durable import
+# graph acyclic; durable.manifest depends only on durable.atomic.
+from ..durable.manifest import structure_fingerprint
+from ..durable.wal import FRAME_BATCH
 
 _QUERY_TILE = 1024  # block_rows(8) x LANES(128): one grid row
 
@@ -96,6 +100,14 @@ class EngineConfig:
     # shard workers (sleep releases the GIL) exactly as concurrent NVMe
     # queues would — the wall-clock benchmark mode.
     io_wait_s: float = 0.0
+    # Durability: a WAL directory turns on per-shard write-ahead logging
+    # plus the level manifest (see ``repro.durable``).  Batches are
+    # acknowledged only after their write ops are appended (and, under
+    # the "batch" policy, fsynced).  ``fsync`` is one of "batch" |
+    # "rotate" | "never" (see ``durable.wal.FSYNC_POLICIES``).
+    wal_dir: str | None = None
+    fsync: str = "batch"
+    wal_segment_bytes: int = 4 << 20
 
 
 class ShardExecutor:
@@ -116,6 +128,59 @@ class ShardExecutor:
         # the per-level kernel fallback (per-SSTable pieces + GLORAN
         # interval views, structurally invalidated).
         self.registry = DeviceFilterRegistry(self.kernels, device=device)
+        # Durability attachments (None = volatile shard; see
+        # ``Engine._attach_durability`` / ``repro.durable``).  The WAL
+        # writer is single-appender by construction: all appends happen
+        # on this shard's worker thread (or the engine thread after a
+        # drain), the existing per-shard FIFO.
+        self.wal = None
+        self.manifest = None
+        self.shard_id = 0
+
+    def attach_durability(self, wal, manifest, shard_id: int) -> None:
+        self.wal = wal
+        self.manifest = manifest
+        self.shard_id = int(shard_id)
+
+    def _log_plan(self, sp: ShardPlan) -> None:
+        """Group commit: ONE WAL frame holding every write op of this
+        shard plan (reads are not logged — replay re-derives any reads
+        embedded in delete strategies from the rebuilt state).  Under
+        the "batch" fsync policy the frame is durable before any step
+        executes, so acknowledgement (which follows ``run_plan``)
+        implies durability."""
+        kinds, keys, vals, los, his = [], [], [], [], []
+        for step in sp.steps:
+            if step.kind not in (OP_PUT, OP_DELETE, OP_RANGE_DELETE):
+                continue
+            if step.kind == OP_RANGE_DELETE:
+                n = len(step.los)
+                z = np.zeros(n, np.uint64)
+                keys.append(z)
+                vals.append(z)
+                los.append(step.los)
+                his.append(step.his)
+            else:
+                n = len(step.keys)
+                z = np.zeros(n, np.uint64)
+                keys.append(step.keys)
+                vals.append(step.vals if step.kind == OP_PUT else z)
+                los.append(z)
+                his.append(z)
+            kinds.append(np.full(n, step.kind, np.uint8))
+        if not kinds:
+            return
+        self.wal.append(FRAME_BATCH, sp.seq, np.concatenate(kinds),
+                        np.concatenate(keys), np.concatenate(vals),
+                        np.concatenate(los), np.concatenate(his))
+
+    def _maybe_record_structure(self, fp0, reason: str) -> None:
+        """Commit a manifest edit iff the durable structure moved."""
+        if self.manifest is None:
+            return
+        if structure_fingerprint(self.tree) != fp0:
+            self.manifest.record_structure(self.shard_id, self.tree,
+                                           reason=reason)
 
     # ----------------------------------------------------------- writes
     def put_batch(self, keys: np.ndarray, vals: np.ndarray) -> None:
@@ -141,8 +206,18 @@ class ShardExecutor:
         self.tree.range_delete_arrays(los, his)
 
     def flush(self) -> None:
-        """Flush the shard's memtable (and LRR buffer) to level 0."""
+        """Flush the shard's memtable (and LRR buffer) to level 0.
+
+        Durable shards first log a FLUSH marker — the flush mutates
+        level structure outside any plan, and replay must flush at the
+        same point for level shapes to come back byte-identical — and
+        commit a manifest edit if the level stack moved."""
+        if self.wal is not None:
+            self.wal.append_flush()
+        fp0 = (structure_fingerprint(self.tree)
+               if self.manifest is not None else None)
         self.tree.flush()
+        self._maybe_record_structure(fp0, "flush")
 
     # ------------------------------------------------------- typed plans
     def run_plan(self, sp: ShardPlan) -> tuple[list, float]:
@@ -164,6 +239,12 @@ class ShardExecutor:
                   steps=len(sp.steps), n_ops=sp.n_ops,
                   device="host" if self.device is None else
                   f"{self.device.platform}:{self.device.id}"):
+            if self.wal is not None:
+                with span("shard.wal_append", shard=sp.shard,
+                          batch=sp.seq):
+                    self._log_plan(sp)
+            fp0 = (structure_fingerprint(self.tree)
+                   if self.manifest is not None else None)
             for step in sp.steps:
                 with span("shard." + KIND_NAMES[step.kind], n=len(step),
                           shard=sp.shard, batch=sp.seq):
@@ -191,6 +272,7 @@ class ShardExecutor:
                         dio = self.tree.io.total - io0
                         if dio:
                             time.sleep(dio * io_wait)
+            self._maybe_record_structure(fp0, "plan")
         return payloads, time.perf_counter() - t0
 
     # ------------------------------------------------------------ reads

@@ -37,6 +37,9 @@ class SSTable:
         self.types = types.astype(np.uint8, copy=False)
         self.vals = vals.astype(np.uint64, copy=False)
         self.config = config
+        # Recorded so snapshots can rebuild this exact run (arrays +
+        # seed fully determine the filter) on restore.
+        self.seed = int(seed)
         n = len(keys)
         self.bloom = BloomBits(max(64, n * config.bloom_bits_per_key),
                                config.bloom_hashes, seed=seed or 17)
