@@ -154,10 +154,14 @@ def engine_cfg(pipeline: bool, devices: int | None = None) -> EngineConfig:
     # passed explicitly (not left to REPRO_ENGINE_DEVICES) so the
     # serial baseline is always the single-device path and the
     # pipelined side always pins per-shard devices, whatever the env.
+    # scheduler is pinned off: the legacy sweep rows measure the
+    # pipelined-vs-serial architecture and must not drift across the CI
+    # REPRO_ENGINE_BG_COMPACT matrix cells; the background scheduler
+    # has its own dedicated section (``bench_bg_scheduler``).
     return EngineConfig(partition="range", pipeline=pipeline,
                         cache_blocks=0, kernel_min_batch=32,
                         kernel_min_areas=32, kernel_min_filter=512,
-                        devices=devices)
+                        devices=devices, scheduler=False)
 
 
 def preload_keys() -> np.ndarray:
@@ -457,7 +461,8 @@ def bench_wal_overhead() -> dict:
 
     def one_pass(wal_dir: str | None) -> tuple[float, dict | None]:
         cfg = EngineConfig(partition="range", pipeline=False, devices=0,
-                           wal_dir=wal_dir, fsync="batch")
+                           wal_dir=wal_dir, fsync="batch",
+                           scheduler=False)
         eng = Engine(num_shards=2, strategy="gloran",
                      lsm_config=lsm_cfg(), gloran_config=gloran_cfg(),
                      config=cfg)
@@ -503,6 +508,170 @@ def bench_wal_overhead() -> dict:
     print(f"# wal overhead: {nw:.3f}s -> {ww:.3f}s "
           f"({out['overhead_ratio']}x, {out['wal_fsyncs']} fsyncs, "
           f"{out['wal_bytes'] / 1e6:.1f} MB logged)", flush=True)
+    return out
+
+
+def bench_flush_materialize() -> dict:
+    """Memtable->run materialization: row-tuple loop vs columnar sort.
+
+    The flush path used to materialize the memtable with a Python
+    row-tuple comprehension (``np.array([(k, s, t, v) ...])``); it now
+    reuses the read path's cached columnar snapshot
+    (``LSMTree._mem_sorted`` -> ``build_sstable(presorted=True)``).
+    This micro-bench times both materializations over the same
+    10^5-entry memtable dict and checks they produce identical runs.
+    """
+    from repro.lsm.sstable import build_sstable
+    from repro.lsm.tree import LSMTree
+
+    n = 100_000
+    rng = np.random.default_rng(41)
+    keys = rng.permutation(
+        rng.integers(0, UNIVERSE, size=n).astype(np.uint64))
+    tree = LSMTree(LSMConfig(buffer_capacity=n + 1, key_size=16,
+                             value_size=48, key_universe=UNIVERSE),
+                   strategy="decomp")
+    tree.put_batch(keys, keys + np.uint64(1))
+    cfg = tree.config
+
+    def legacy():
+        items = np.array([(k, s, t, v)
+                          for k, (s, t, v) in tree.mem.items()],
+                         dtype=np.uint64)
+        return build_sstable(items[:, 0], items[:, 1],
+                             items[:, 2].astype(np.uint8), items[:, 3],
+                             cfg)
+
+    def columnar():
+        tree._mem_snap = None  # charge the sort to this path
+        mk, ms, mt, mv = tree._mem_sorted()
+        return build_sstable(mk, ms, mt, mv, cfg, presorted=True)
+
+    reps = max(REPS, 3)
+    walls = {"legacy": [], "columnar": []}
+    runs = {}
+    for _ in range(reps):
+        for name, fn in (("legacy", legacy), ("columnar", columnar)):
+            t0 = time.perf_counter()
+            runs[name] = fn()
+            walls[name].append(time.perf_counter() - t0)
+    np.testing.assert_array_equal(runs["legacy"].keys,
+                                  runs["columnar"].keys)
+    np.testing.assert_array_equal(runs["legacy"].vals,
+                                  runs["columnar"].vals)
+    lw = float(np.median(walls["legacy"]))
+    cw = float(np.median(walls["columnar"]))
+    out = {
+        "entries": n,
+        "reps": reps,
+        "legacy_wall_seconds": round(lw, 4),
+        "columnar_wall_seconds": round(cw, 4),
+        "speedup": round(lw / cw, 2),
+    }
+    print(f"# flush materialize x{n}: rows {lw:.3f}s -> columnar "
+          f"{cw:.3f}s ({out['speedup']}x)", flush=True)
+    return out
+
+
+def bench_bg_scheduler() -> dict:
+    """Background compaction: put tail latency + steady-state uploads.
+
+    A session-expiry stream (each round puts a fresh key window, range-
+    deletes the previous one, then reads) runs against two otherwise
+    identical engines: inline flushes (``scheduler=False``) vs the
+    background scheduler with the Lethe-style tombstone-density trigger.
+    Batches submit serially (depth 1) so each batch's wall is exactly
+    what it carries:
+
+      inline  the put batch that fills the memtable pays the flush +
+              L0 merge (and any cascade) on its own wall — the p99 put
+              tail IS the compaction.
+      bg      the same put batch only seals the memtable; the flush job
+              runs at the next plan's drain point (the read batch),
+              and tombstone-dense levels compact proactively, purging
+              range-deleted entries at the bottom.
+
+    Reported: per-batch put p99 from the engine latency histograms
+    (``stats()["engine"]["latency"]["put"]``) over the measured window,
+    and the same window's host->device ``upload_bytes`` delta — the
+    proactive purge keeps levels and the GLORAN index small, so the
+    read path's device re-packs move fewer bytes at steady state.
+    """
+    warm, rounds = (1, 5) if SMOKE else (2, 12)
+    span_w = 1 << 14  # key window per round; fully expired next round
+
+    def round_batches(r: int, rng) -> list[OpBatch]:
+        base = (r * span_w) % (UNIVERSE - 2 * span_w)
+        keys = base + rng.choice(span_w, size=4096,
+                                 replace=False).astype(np.uint64)
+        prev = (base - span_w) % (UNIVERSE - 2 * span_w)
+        step = span_w // 32
+        rdels = [(int(prev + j * step), int(prev + (j + 1) * step))
+                 for j in range(32)]
+        reads = base + rng.integers(0, span_w,
+                                    size=2048).astype(np.uint64)
+        return [OpBatch.puts(keys[:2048], keys[:2048] + np.uint64(1)),
+                OpBatch.puts(keys[2048:], keys[2048:] + np.uint64(1)),
+                OpBatch.gets(reads),
+                OpBatch.range_deletes(rdels)]
+
+    def one_side(background: bool) -> dict:
+        cfg = EngineConfig(partition="range", pipeline=False, devices=0,
+                           kernel_min_batch=32, kernel_min_areas=32,
+                           kernel_min_filter=512,
+                           scheduler=background, max_frozen=4,
+                           tombstone_trigger=0.1 if background
+                           else None)
+        eng = Engine(num_shards=1, strategy="gloran",
+                     lsm_config=lsm_cfg(), gloran_config=gloran_cfg(),
+                     config=cfg)
+        rng = np.random.default_rng(53)
+        for r in range(warm):
+            for b in round_batches(r, rng):
+                eng.submit(b, pipeline=False).wait()
+        eng.reset_stats()
+        up0 = eng.kernel_counters.upload_bytes
+        for r in range(warm, warm + rounds):
+            for b in round_batches(r, rng):
+                eng.submit(b, pipeline=False).wait()
+        snap = eng.stats()
+        put = snap["engine"]["latency"]["put"]
+        out = {
+            "p99_put_us": put["p99_us"],
+            "p50_put_us": put["p50_us"],
+            "upload_bytes": eng.kernel_counters.upload_bytes - up0,
+            "entries": eng.num_entries,
+        }
+        if background:
+            out["sched"] = snap["sched"]
+        eng.close()
+        return out
+
+    inline = one_side(False)
+    bg = one_side(True)
+    out = {
+        "rounds": rounds,
+        "puts_per_round": 4096,
+        "inline_p99_put_us": inline["p99_put_us"],
+        "bg_p99_put_us": bg["p99_put_us"],
+        "p99_put_improvement": round(
+            inline["p99_put_us"] / max(bg["p99_put_us"], 1e-9), 2),
+        "inline_p50_put_us": inline["p50_put_us"],
+        "bg_p50_put_us": bg["p50_put_us"],
+        "inline_upload_bytes": inline["upload_bytes"],
+        "bg_upload_bytes": bg["upload_bytes"],
+        "upload_bytes_ratio": round(
+            bg["upload_bytes"] / max(inline["upload_bytes"], 1), 3),
+        "inline_entries": inline["entries"],
+        "bg_entries": bg["entries"],
+        "sched": bg["sched"],
+    }
+    print(f"# bg scheduler: put p99 {inline['p99_put_us']:.0f}us -> "
+          f"{bg['p99_put_us']:.0f}us ({out['p99_put_improvement']}x), "
+          f"uploads {inline['upload_bytes'] / 1e6:.1f}MB -> "
+          f"{bg['upload_bytes'] / 1e6:.1f}MB "
+          f"(ratio {out['upload_bytes_ratio']}), "
+          f"{out['sched']['proactive_jobs']} proactive jobs", flush=True)
     return out
 
 
@@ -560,6 +729,8 @@ def run() -> dict:
                   and r.get("wall_speedup") is not None]
     buf = bench_buffer_insert()
     wal = bench_wal_overhead()
+    flm = bench_flush_materialize()
+    bg = bench_bg_scheduler()
     result = {
         "config": {
             "preload_entries": PRELOAD,
@@ -582,7 +753,18 @@ def run() -> dict:
         "rows": rows,
         "buffer_insert": buf,
         "wal": wal,
+        "flush_materialize": flm,
+        "bg_scheduler": bg,
         "acceptance": {
+            # Background compaction gates (scripts/check.sh): the put
+            # p99 under the delete-heavy session-expiry stream must be
+            # >= 2x better with the scheduler on (puts stop carrying
+            # flush/compaction), and the measured window must move
+            # FEWER host->device bytes (proactive tombstone-density
+            # compaction purges dead entries, so device re-packs
+            # shrink at steady state).
+            "bg_p99_put_improvement": bg["p99_put_improvement"],
+            "bg_upload_bytes_ratio": bg["upload_bytes_ratio"],
             # Durability gate: put-heavy throughput with group-commit
             # WAL (fsync per submitted batch) within 1.25x of no-WAL.
             "wal_overhead": wal["overhead_ratio"],

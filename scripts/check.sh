@@ -83,6 +83,19 @@ w = d["acceptance"]["wal_overhead"]
 assert w is not None and w <= 1.25, \
     f"WAL overhead regressed: {w}x > 1.25x vs no-WAL put-heavy stream"
 print(f"check OK: group-commit WAL overhead {w}x <= 1.25x")
+# Background compaction gates: put p99 under the delete-heavy
+# session-expiry stream must be >= 2x better with the scheduler on
+# (puts seal instead of carrying flush/compaction), and the measured
+# window must move fewer host->device bytes (proactive tombstone-
+# density compaction purges dead entries, shrinking device re-packs).
+p = d["acceptance"]["bg_p99_put_improvement"]
+assert p is not None and p >= 2.0, \
+    f"background-scheduler put p99 win regressed: {p}x < 2x vs inline"
+print(f"check OK: background scheduler put p99 {p}x better than inline")
+u = d["acceptance"]["bg_upload_bytes_ratio"]
+assert u is not None and u < 1.0, \
+    f"background-scheduler upload bytes not lower: ratio {u} >= 1.0"
+print(f"check OK: background steady-state upload bytes ratio {u} < 1.0")
 EOF
 
 # Durability: cold-start recovery smoke.  Each row round-trips a store

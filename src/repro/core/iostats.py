@@ -24,6 +24,18 @@ class IOStats:
     reads: int = 0
     writes: int = 0
     by_tag: dict = field(default_factory=dict)
+    # Opt-in charging lock (``enable_locking``): plain ``+=`` is enough
+    # on the per-shard FIFO, but with a background compaction scheduler
+    # attached an engine-level drain point may charge from a caller
+    # thread while the shard worker idles between plans — the lock
+    # makes those interleavings count-exact.  None (the default) keeps
+    # the hot path branch-cheap.
+    _lock: object = field(default=None, repr=False, compare=False)
+
+    def enable_locking(self) -> None:
+        if self._lock is None:
+            import threading
+            self._lock = threading.Lock()
 
     def read_blocks(self, n: int, tag: str = "") -> None:
         # A zero charge is a no-op: it must not materialize a tag entry,
@@ -32,6 +44,12 @@ class IOStats:
         n = int(n)
         if n == 0:
             return
+        if self._lock is not None:
+            with self._lock:
+                self.reads += n
+                if tag:
+                    self.by_tag[tag] = self.by_tag.get(tag, 0) + n
+            return
         self.reads += n
         if tag:
             self.by_tag[tag] = self.by_tag.get(tag, 0) + n
@@ -39,6 +57,12 @@ class IOStats:
     def write_blocks(self, n: int, tag: str = "") -> None:
         n = int(n)
         if n == 0:
+            return
+        if self._lock is not None:
+            with self._lock:
+                self.writes += n
+                if tag:
+                    self.by_tag[tag] = self.by_tag.get(tag, 0) + n
             return
         self.writes += n
         if tag:

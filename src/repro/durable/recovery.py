@@ -57,7 +57,14 @@ def replay_frame(sh, frame) -> None:
     interleaved reads, which is equivalence-preserving: every batch
     write path chunks at its own flush/capacity boundaries, so the same
     records cross the same thresholds in the same order.
+
+    Each frame was one shard plan, and with the background scheduler on
+    every plan drained due jobs before its steps — replay mirrors that
+    drain point so flushes/compactions interleave with the write stream
+    at the same boundaries (delete application during bottom compaction
+    is order-sensitive).
     """
+    sh.run_scheduler("recover")
     if frame.ftype == FRAME_FLUSH:
         sh.flush()
         return
@@ -136,6 +143,11 @@ def recover(wal_dir: str, *, config=None, use_snapshot: bool = True):
         for fr in frames[s][starts[s]:]:
             replay_frame(sh, fr)
             replayed += 1
+    # Background mode: replay enters through the executors' write paths
+    # directly (no plans run), so seals queued by capacity boundaries
+    # drain here — the manifest records below must describe the fully
+    # published level structure, same as a drained live engine.
+    engine.drain()
 
     writers = []
     for s in range(num_shards):

@@ -25,6 +25,7 @@ from ..core.gloran import GloranConfig
 from ..launch.mesh import shard_devices
 from ..lsm import LSMConfig, LSMTree
 from ..lsm.merge import merge_runs
+from ..lsm.scheduler import CompactionScheduler, level_rt_density
 from ..obs import MetricsRegistry, span
 from .executor import EngineConfig, ShardExecutor
 from .pending import PendingBatch
@@ -114,6 +115,20 @@ class Engine:
             dev = self.devices[s] if self.devices is not None else None
             self.shards.append(ShardExecutor(tree, self.config,
                                              device=dev))
+        # Background delete-aware compaction (lsm/scheduler.py):
+        # ``EngineConfig.scheduler`` wins; None defers to
+        # REPRO_ENGINE_BG_COMPACT; unset/0 = off (the inline flush
+        # path, byte-identical to the pre-scheduler engine).
+        sched = self.config.scheduler
+        if sched is None:
+            env = os.environ.get("REPRO_ENGINE_BG_COMPACT", "").strip()
+            sched = bool(env) and env != "0"
+        self.background = bool(sched)
+        if self.background:
+            for sh in self.shards:
+                sh.attach_scheduler(CompactionScheduler(
+                    sh.tree, max_frozen=self.config.max_frozen,
+                    tombstone_trigger=self.config.tombstone_trigger))
         self.stats_ = EngineStats()
         self.metrics = MetricsRegistry()
         pl = self.config.pipeline
@@ -202,13 +217,19 @@ class Engine:
             return pending
 
     def drain(self) -> None:
-        """Block until every in-flight submitted batch has collected."""
+        """Block until every in-flight submitted batch has collected,
+        then run any due background scheduler jobs — a drained engine
+        is fully caught up (flushes published, cascades applied),
+        exactly the state the inline path would be in."""
         while True:
             with self._inflight_lock:
                 if not self._inflight:
-                    return
+                    break
                 pending = self._inflight[0]
             pending.wait()
+        if self.background:
+            for sh in self.shards:
+                sh.run_scheduler("drain")
 
     def _shard_pools(self) -> list[ThreadPoolExecutor]:
         """One single-worker pool per shard: cross-shard parallelism with
@@ -468,6 +489,37 @@ class Engine:
             m.absorb("staging", {k: v for k, v in
                                  self.stats_.staging.items()
                                  if k != "per_shard"})
+        # Background-scheduler health: job/stall counters + compaction
+        # debt across the fleet (``sched.*`` metrics).
+        if self.background:
+            agg2: dict = {}
+            for sh in self.shards:
+                for k, v in sh.scheduler.counters().items():
+                    agg2[k] = agg2.get(k, 0) + v
+            agg2["stall_seconds"] = round(agg2["stall_seconds"], 6)
+            out["sched"] = agg2
+            m.absorb("sched", agg2)
+        # Per-level compaction observability: bytes moved compacting
+        # into each level (+ range-tombstone rewrites) and the
+        # estimated range-tombstone density — the scheduler's priority
+        # inputs, inspectable whether or not background mode is on.
+        lsm_m: dict = {}
+        for sh in self.shards:
+            for i, b in sh.tree.compaction_bytes.items():
+                k = f"compaction.bytes.L{i}"
+                lsm_m[k] = lsm_m.get(k, 0) + b
+            for i, b in sh.tree.rt_compaction_bytes.items():
+                k = f"rt_compaction.bytes.L{i}"
+                lsm_m[k] = lsm_m.get(k, 0) + b
+        for i in range(max((len(sh.tree.levels)
+                            for sh in self.shards), default=0)):
+            dens = [level_rt_density(sh.tree, i) for sh in self.shards
+                    if i < len(sh.tree.levels)]
+            if dens:
+                lsm_m[f"rt_density.L{i}"] = round(max(dens), 4)
+        if lsm_m:
+            out["lsm"] = lsm_m
+            m.absorb("lsm", lsm_m)
         wals = [sh.wal for sh in self.shards if sh.wal is not None]
         if wals:
             agg: dict = {}

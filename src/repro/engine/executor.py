@@ -108,6 +108,23 @@ class EngineConfig:
     wal_dir: str | None = None
     fsync: str = "batch"
     wal_segment_bytes: int = 4 << 20
+    # Background delete-aware compaction scheduling (lsm/scheduler.py):
+    # None = env (REPRO_ENGINE_BG_COMPACT; unset/0 = off — the inline
+    # flush path, byte-identical to the scheduler-less engine).  With it
+    # on, a full memtable seals into an immutable snapshot and flush +
+    # cascade run as background jobs at the deterministic drain points,
+    # so put batches stop carrying compaction on their wall clock.
+    scheduler: bool | None = None
+    # Soft limit on sealed-but-unflushed memtables per shard; sealing
+    # past it backpressures (runs due jobs on the sealing thread,
+    # counted as a stall).
+    max_frozen: int = 4
+    # Lethe-style proactive compaction trigger: a level whose estimated
+    # range-tombstone density reaches this fraction is compacted down
+    # ahead of overflow (None = capacity-driven only, the parity
+    # default — proactive compaction intentionally diverges from the
+    # inline level shapes to reclaim GLORAN garbage early).
+    tombstone_trigger: float | None = None
 
 
 class ShardExecutor:
@@ -136,11 +153,37 @@ class ShardExecutor:
         self.wal = None
         self.manifest = None
         self.shard_id = 0
+        # Background compaction scheduler (None = inline flush path).
+        self.scheduler = None
+        # Compactions route their two-run merge through the gated
+        # merge-rank kernel closure (bit-exact with the host
+        # searchsorted pair — same hook the scan tournament uses).
+        tree.compaction_rank_fn = self._rank_fn()
 
     def attach_durability(self, wal, manifest, shard_id: int) -> None:
         self.wal = wal
         self.manifest = manifest
         self.shard_id = int(shard_id)
+
+    def attach_scheduler(self, scheduler) -> None:
+        """Enable background mode: the tree seals instead of flushing
+        inline, and this executor drains the job queue at every plan
+        start / explicit flush (the deterministic points that keep
+        results byte-identical to the inline path)."""
+        self.scheduler = scheduler
+        self.tree.scheduler = scheduler
+        self.tree.io.enable_locking()
+
+    def run_scheduler(self, reason: str = "sched") -> None:
+        """Drain due background jobs, committing a manifest edit if the
+        level structure moved (jobs mutate structure outside any plan,
+        exactly like an explicit flush)."""
+        if self.scheduler is None or not self.scheduler.has_work():
+            return
+        fp0 = (structure_fingerprint(self.tree)
+               if self.manifest is not None else None)
+        self.scheduler.run_due()
+        self._maybe_record_structure(fp0, reason)
 
     def _log_plan(self, sp: ShardPlan) -> None:
         """Group commit: ONE WAL frame holding every write op of this
@@ -217,6 +260,10 @@ class ShardExecutor:
         fp0 = (structure_fingerprint(self.tree)
                if self.manifest is not None else None)
         self.tree.flush()
+        if self.scheduler is not None:
+            # Explicit flush is synchronous: the FLUSH frame above acks
+            # only after the background flush durably publishes.
+            self.scheduler.drain()
         self._maybe_record_structure(fp0, "flush")
 
     # ------------------------------------------------------- typed plans
@@ -243,6 +290,12 @@ class ShardExecutor:
                 with span("shard.wal_append", shard=sp.shard,
                           batch=sp.seq):
                     self._log_plan(sp)
+            # Background jobs drain BEFORE the plan's steps: every plan
+            # starts from the fully-caught-up state the inline path
+            # would have reached, which is what keeps cross-plan
+            # results, level shapes, and I/O ledgers byte-identical
+            # with the scheduler on.
+            self.run_scheduler()
             fp0 = (structure_fingerprint(self.tree)
                    if self.manifest is not None else None)
             for step in sp.steps:

@@ -274,20 +274,47 @@ class RangeTombstoneBlock:
 
 
 def build_sstable(keys, seqs, types, vals, config: LSMConfig,
-                  io: IOStats | None = None, seed: int = 0) -> SSTable:
+                  io: IOStats | None = None, seed: int = 0,
+                  presorted: bool = False) -> SSTable:
     """Sort + dedup (keep the newest version per key) and charge the
-    sequential write I/O of the run."""
+    sequential write I/O of the run.
+
+    ``presorted=True`` skips the lexsort for input that is already
+    key-sorted with duplicate keys adjacent (a memtable's cached
+    columnar snapshot, or a two-run sorted-view merge): dedup resolves
+    each adjacent group to its max-seq entry, which — sequence numbers
+    being unique — selects exactly the rows the lexsort path keeps, so
+    the built run (bloom bits included: same key set, same seed) is
+    byte-identical either way.
+    """
     keys = np.asarray(keys, dtype=np.uint64)
     seqs = np.asarray(seqs, dtype=np.uint64)
     types = np.asarray(types, dtype=np.uint8)
     vals = np.asarray(vals, dtype=np.uint64)
-    # Sort by (key, seq); the last duplicate of each key is the newest.
-    order = np.lexsort((seqs, keys))
-    keys, seqs, types, vals = keys[order], seqs[order], types[order], vals[order]
-    last = np.ones(len(keys), dtype=bool)
-    last[:-1] = keys[1:] != keys[:-1]
-    t = SSTable(keys[last], seqs[last], types[last], vals[last], config,
-                seed=seed)
+    if presorted:
+        n = len(keys)
+        if n:
+            new_grp = np.empty(n, dtype=bool)
+            new_grp[0] = True
+            np.not_equal(keys[1:], keys[:-1], out=new_grp[1:])
+            if not new_grp.all():  # duplicate keys across merged runs
+                starts = np.flatnonzero(new_grp)
+                grp_max = np.maximum.reduceat(seqs, starts)
+                gid = np.cumsum(new_grp) - 1
+                keep = seqs == grp_max[gid]
+                keys, seqs, types, vals = (keys[keep], seqs[keep],
+                                           types[keep], vals[keep])
+    else:
+        # Sort by (key, seq); the last duplicate of each key is the
+        # newest.
+        order = np.lexsort((seqs, keys))
+        keys, seqs, types, vals = (keys[order], seqs[order], types[order],
+                                   vals[order])
+        last = np.ones(len(keys), dtype=bool)
+        last[:-1] = keys[1:] != keys[:-1]
+        keys, seqs, types, vals = (keys[last], seqs[last], types[last],
+                                   vals[last])
+    t = SSTable(keys, seqs, types, vals, config, seed=seed)
     if io is not None:
         io.write_sequential(t.nbytes, tag="flush_or_compact")
     return t

@@ -17,6 +17,7 @@ cost model; benchmarks report those counts alongside wall time.
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from itertools import repeat
 
@@ -26,7 +27,8 @@ from ..core.gloran import GloranConfig, GloranIndex
 from ..core.iostats import IOStats
 from ..obs import span
 from .format import LSMConfig, PUT, TOMBSTONE
-from .merge import empty_run, merge_runs, newest_wins
+from .merge import empty_run, merge_runs, merge_two, newest_wins
+from .scheduler import FrozenMemtable
 from .sstable import RangeTombstoneBlock, SSTable, build_sstable
 
 STRATEGIES = ("decomp", "lookup_delete", "scan_delete", "lrr", "gloran")
@@ -72,6 +74,30 @@ class LSMTree:
         if strategy == "gloran":
             self.gloran = GloranIndex(gloran_config, io=self.io)
         self._sstable_seed = 0
+        # Background mode (see lsm/scheduler.py): with a scheduler
+        # attached, a full memtable SEALS into ``frozen`` (oldest first)
+        # instead of flushing inline; reads serve active + frozen[] +
+        # levels.  ``scheduler is None`` keeps the inline path
+        # byte-identical — ``frozen`` stays empty and every guard below
+        # short-circuits.
+        self.frozen: list[FrozenMemtable] = []
+        self.scheduler = None
+        # Structural epoch + publish lock: every seal / level publish
+        # bumps the epoch under the lock so out-of-band readers (stats,
+        # registry views) can snapshot a consistent level set while a
+        # drain point runs jobs on another thread.
+        self.struct_epoch = 0
+        self._struct_lock = threading.RLock()
+        # Optional merge-rank hook for compactions (the engine installs
+        # its gated Pallas merge-rank closure); None = host searchsorted.
+        self.compaction_rank_fn = None
+        # Per-level compaction observability (satellite of the
+        # scheduler work): bytes moved compacting INTO each level and
+        # range-tombstone bytes rewritten per level, surfaced as
+        # ``lsm.compaction.bytes.L<i>`` / ``lsm.rt_compaction.bytes.L<i>``
+        # in engine.stats().
+        self.compaction_bytes: dict[int, int] = {}
+        self.rt_compaction_bytes: dict[int, int] = {}
 
     # ------------------------------------------------------------ helpers
     def _next_seq(self) -> int:
@@ -211,6 +237,26 @@ class LSMTree:
         if hit is not None:
             seq, typ, val = hit
             return self._resolve(key, seq, typ, val, rt_max)
+        if self.frozen:
+            # Sealed snapshots sit between the active memtable and the
+            # levels: newest first, memory-resident (no I/O charge).
+            # Seal boundaries are temporal (sequence numbers only grow),
+            # so accumulating EVERY frozen range tombstone before
+            # probing data is exact — an older tombstone's seq can
+            # never exceed a newer entry's.
+            if self.strategy == "lrr":
+                for fz in self.frozen:
+                    for lo, hi, s in fz.rts:
+                        if lo <= key < hi:
+                            rt_max = max(rt_max, s)
+            for fz in reversed(self.frozen):
+                if not len(fz.keys):
+                    continue
+                j = int(np.searchsorted(fz.keys, np.uint64(key)))
+                if j < len(fz.keys) and fz.keys[j] == key:
+                    return self._resolve(key, int(fz.seqs[j]),
+                                         int(fz.types[j]),
+                                         int(fz.vals[j]), rt_max)
         for i, lvl in enumerate(self.levels):
             if self.strategy == "lrr" and i < len(self.level_rts) and \
                     len(self.level_rts[i]):
@@ -273,6 +319,34 @@ class LSMTree:
             out_found[hitm] = mt[jh] == PUT
             out_seqs[hitm] = ms[jh]
             out_vals[hitm] = mv[jh]
+
+        # Sealed (frozen) memtables, newest first: memory-resident
+        # sorted snapshots probed with the same batched binary search,
+        # no I/O charge.  Frozen LRR tombstones fold into rt_max up
+        # front — seal boundaries are temporal, so the superset is
+        # exact (an older tombstone can't outrank a newer entry).
+        if self.frozen:
+            if self.strategy == "lrr":
+                for fz in self.frozen:
+                    for lo, hi, s in fz.rts:
+                        m = (keys >= lo) & (keys < hi)
+                        rt_max[m] = np.maximum(rt_max[m], np.uint64(s))
+            for fz in reversed(self.frozen):
+                if not len(fz.keys):
+                    continue
+                todo = ~resolved
+                if not todo.any():
+                    break
+                sub = keys[todo]
+                j = np.minimum(np.searchsorted(fz.keys, sub),
+                               len(fz.keys) - 1)
+                hitm = fz.keys[j] == sub
+                idx = np.flatnonzero(todo)[hitm]
+                jh = j[hitm]
+                resolved[idx] = True
+                out_found[idx] = fz.types[jh] == PUT
+                out_seqs[idx] = fz.seqs[jh]
+                out_vals[idx] = fz.vals[jh]
 
         # One fused launch answers bloom + fence + GLORAN for all
         # levels; the loop below replays resolution order around it.
@@ -386,12 +460,21 @@ class LSMTree:
         mem = self._mem_sorted()
         m_lo = np.searchsorted(mem[0], los)
         m_hi = np.searchsorted(mem[0], his)
+        # Frozen snapshots contribute one memory-resident slice each
+        # (no I/O, like the active memtable); newest_wins resolves
+        # versions by seq, so part order is immaterial.
+        per_frozen = [(fz, np.searchsorted(fz.keys, los),
+                       np.searchsorted(fz.keys, his))
+                      for fz in self.frozen if len(fz.keys)]
         per_level = [lvl.range_slice_many(los, his, self.io, cache=cache)
                      for lvl in self.levels
                      if lvl is not None and len(lvl)]
         merged = []
         for j in range(nr):
             parts = [tuple(x[m_lo[j]:m_hi[j]] for x in mem)]
+            parts += [(fz.keys[a[j]:b[j]], fz.seqs[a[j]:b[j]],
+                       fz.types[a[j]:b[j]], fz.vals[a[j]:b[j]])
+                      for fz, a, b in per_frozen]
             parts += [slices[j] for slices in per_level]
             merged.append(newest_wins(*merge_runs(parts, rank_fn=rank_fn)))
         live = [m[2] == PUT for m in merged]
@@ -430,6 +513,10 @@ class LSMTree:
         for lo_, hi_, s_ in self.mem_rts:
             m = (keys >= lo_) & (keys < hi_)
             rt_max[m] = np.maximum(rt_max[m], np.uint64(s_))
+        for fz in self.frozen:
+            for lo_, hi_, s_ in fz.rts:  # memory-resident: no charge
+                m = (keys >= lo_) & (keys < hi_)
+                rt_max[m] = np.maximum(rt_max[m], np.uint64(s_))
         for rtb in self.level_rts:
             if len(rtb):
                 cnts = np.searchsorted(rtb.starts, his)
@@ -443,22 +530,72 @@ class LSMTree:
     def flush(self) -> None:
         if not self.mem and not self.mem_rts:
             return
+        if self.scheduler is not None:
+            # Background mode: seal (cheap — the cached columnar
+            # snapshot) and let the scheduler flush/compact at the next
+            # drain point.  The foreground thread never pays the
+            # cascade unless the frozen soft limit backpressures.
+            self._seal()
+            return
         with span("lsm.flush", entries=len(self.mem),
                   range_tombstones=len(self.mem_rts)):
             self._flush()
 
+    def _seal(self) -> None:
+        """Freeze the active memtable (and LRR buffer) into an
+        immutable snapshot served by reads until a background flush
+        job publishes it as a level-0 run."""
+        with span("lsm.seal", entries=len(self.mem),
+                  range_tombstones=len(self.mem_rts),
+                  backlog=len(self.frozen)):
+            mk, ms, mt, mv = self._mem_sorted()
+            with self._struct_lock:
+                self.frozen.append(FrozenMemtable(mk, ms, mt, mv,
+                                                  self.mem_rts))
+                self.mem = {}
+                self._mem_snap = None
+                self.mem_rts = []
+                self.struct_epoch += 1
+        self.scheduler.on_seal()
+
+    def _flush_frozen_one(self) -> None:
+        """Background flush job body: publish the oldest frozen
+        snapshot as a level-0 run with exactly the inline ``_flush``
+        charges (the snapshot holds the same sorted-unique rows the
+        inline path would lexsort, so the run — bloom bits included —
+        is byte-identical).  Capacity cascades are the scheduler's
+        follow-up jobs, not run here."""
+        with self._struct_lock:
+            if not self.frozen:
+                return
+            fz = self.frozen.pop(0)
+            self.struct_epoch += 1
+        if len(fz.keys):
+            self._sstable_seed += 1
+            run = build_sstable(fz.keys, fz.seqs, fz.types, fz.vals,
+                                self.config, io=self.io,
+                                seed=self._sstable_seed, presorted=True)
+            self._merge_into(0, run)
+        if self.strategy == "lrr" and fz.rts:
+            arr = np.array(fz.rts, dtype=np.uint64)
+            rtb = RangeTombstoneBlock(arr[:, 0], arr[:, 1], arr[:, 2],
+                                      self.config)
+            self._ensure_rt(0)
+            self.level_rts[0] = self.level_rts[0].merge(rtb)
+            self.io.write_sequential(self.level_rts[0].nbytes,
+                                     tag="rt_flush")
+
     def _flush(self) -> None:
         if self.mem:
-            items = np.array([(k, s, t, v)
-                              for k, (s, t, v) in self.mem.items()],
-                             dtype=np.uint64)
+            # The cached sorted columnar snapshot IS the run content:
+            # unique keys (dict semantics), key-sorted — no per-entry
+            # python loop, no lexsort in build_sstable (presorted).
+            mk, ms, mt, mv = self._mem_sorted()
             self.mem.clear()
             self._mem_snap = None
             self._sstable_seed += 1
-            run = build_sstable(items[:, 0], items[:, 1],
-                                items[:, 2].astype(np.uint8), items[:, 3],
-                                self.config, io=self.io,
-                                seed=self._sstable_seed)
+            run = build_sstable(mk, ms, mt, mv, self.config, io=self.io,
+                                seed=self._sstable_seed, presorted=True)
             self._merge_into(0, run)
         if self.strategy == "lrr" and self.mem_rts:
             arr = np.array(self.mem_rts, dtype=np.uint64)
@@ -474,23 +611,44 @@ class LSMTree:
         while len(self.level_rts) <= i:
             self.level_rts.append(RangeTombstoneBlock.empty(self.config))
 
+    def _merge_rows(self, a: tuple, b: tuple) -> tuple:
+        """Key-ordered union of two sorted runs (cross-run duplicates
+        adjacent), with output positions through the engine's gated
+        merge-rank kernel hook when installed — bit-identical to the
+        host searchsorted pair, and (after the presorted newest-wins
+        dedup in ``build_sstable``) to the legacy concatenate+lexsort."""
+        return merge_two(a, b, rank_fn=self.compaction_rank_fn)
+
+    def _publish_level(self, i: int, run: SSTable | None) -> None:
+        """Atomically install a level's new run (epoch bump under the
+        structure lock, so concurrent snapshot readers never observe a
+        half-applied compaction)."""
+        with self._struct_lock:
+            self.levels[i] = run
+            self.struct_epoch += 1
+
+    def _track_compaction(self, i: int, nbytes: int) -> None:
+        self.compaction_bytes[i] = self.compaction_bytes.get(i, 0) + \
+            int(nbytes)
+
     def _merge_into(self, i: int, run: SSTable) -> None:
         while len(self.levels) <= i:
             self.levels.append(None)
         self._ensure_rt(i)
         if self.levels[i] is None or len(self.levels[i]) == 0:
-            self.levels[i] = run
+            self._publish_level(i, run)
             return
         dst = self.levels[i]
         self.io.read_sequential(dst.nbytes + run.nbytes, tag="compaction")
+        self._track_compaction(i, dst.nbytes + run.nbytes)
+        keys, seqs, typs, vals = self._merge_rows(
+            (run.keys, run.seqs, run.types, run.vals),
+            (dst.keys, dst.seqs, dst.types, dst.vals))
         self._sstable_seed += 1
-        merged = build_sstable(
-            np.concatenate([dst.keys, run.keys]),
-            np.concatenate([dst.seqs, run.seqs]),
-            np.concatenate([dst.types, run.types]),
-            np.concatenate([dst.vals, run.vals]), self.config, io=self.io,
-            seed=self._sstable_seed)
-        self.levels[i] = merged
+        merged = build_sstable(keys, seqs, typs, vals, self.config,
+                               io=self.io, seed=self._sstable_seed,
+                               presorted=True)
+        self._publish_level(i, merged)
 
     def _is_bottom(self, i: int) -> bool:
         return all(self.levels[j] is None or len(self.levels[j]) == 0
@@ -511,29 +669,35 @@ class LSMTree:
 
     def _compact_impl(self, i: int) -> None:
         src = self.levels[i]
-        self.levels[i] = None
+        self._publish_level(i, None)
         while len(self.levels) <= i + 1:
             self.levels.append(None)
         self._ensure_rt(i + 1)
         dst = self.levels[i + 1]
-        keys = [src.keys] + ([dst.keys] if dst is not None else [])
-        seqs = [src.seqs] + ([dst.seqs] if dst is not None else [])
-        typs = [src.types] + ([dst.types] if dst is not None else [])
-        vals = [src.vals] + ([dst.vals] if dst is not None else [])
         self.io.read_sequential(
             src.nbytes + (dst.nbytes if dst is not None else 0),
             tag="compaction")
-        keys = np.concatenate(keys)
-        seqs = np.concatenate(seqs)
-        typs = np.concatenate(typs)
-        vals = np.concatenate(vals)
-        # Dedup keep-newest happens in build_sstable; apply deletes first.
+        self._track_compaction(
+            i + 1, src.nbytes + (dst.nbytes if dst is not None else 0))
+        # Key-ordered union through the merge-rank path (kernel-gated);
+        # duplicates stay adjacent for the presorted newest-wins dedup
+        # in build_sstable — the delete masks below see the same rows
+        # (elementwise) the legacy concatenate order did.
+        if dst is not None and len(dst):
+            keys, seqs, typs, vals = self._merge_rows(
+                (src.keys, src.seqs, src.types, src.vals),
+                (dst.keys, dst.seqs, dst.types, dst.vals))
+        else:
+            keys, seqs, typs, vals = (src.keys, src.seqs, src.types,
+                                      src.vals)
         bottom = self._is_bottom(i + 1)
         if self.strategy == "lrr":
             rtb = self.level_rts[i].merge(self.level_rts[i + 1])
             self.level_rts[i] = RangeTombstoneBlock.empty(self.config)
             if len(rtb):
                 self.io.read_sequential(rtb.nbytes, tag="rt_compaction")
+                self.rt_compaction_bytes[i + 1] = \
+                    self.rt_compaction_bytes.get(i + 1, 0) + rtb.nbytes
                 cov = rtb.max_covering_batch(keys)
                 keep = ~(cov > seqs)
                 keys, seqs, typs, vals = (keys[keep], seqs[keep], typs[keep],
@@ -544,6 +708,9 @@ class LSMTree:
             else:
                 self.level_rts[i + 1] = rtb
                 self.io.write_sequential(rtb.nbytes, tag="rt_compaction")
+                if len(rtb):
+                    self.rt_compaction_bytes[i + 1] = \
+                        self.rt_compaction_bytes.get(i + 1, 0) + rtb.nbytes
         elif self.strategy == "gloran" and self.gloran is not None and bottom:
             # Stream-merge against the global index: one sequential pass.
             idx = self.gloran.index
@@ -556,7 +723,8 @@ class LSMTree:
                                       vals[keep])
         self._sstable_seed += 1
         merged = build_sstable(keys, seqs, typs, vals, self.config,
-                               io=self.io, seed=self._sstable_seed)
+                               io=self.io, seed=self._sstable_seed,
+                               presorted=True)
         if bottom and len(merged):
             # Point tombstones expire at the bottommost level.
             keep = merged.types != TOMBSTONE
@@ -565,8 +733,9 @@ class LSMTree:
                 merged = build_sstable(merged.keys[keep], merged.seqs[keep],
                                        merged.types[keep], merged.vals[keep],
                                        self.config, io=None,
-                                       seed=self._sstable_seed)
-        self.levels[i + 1] = merged
+                                       seed=self._sstable_seed,
+                                       presorted=True)
+        self._publish_level(i + 1, merged)
         if self.strategy == "gloran" and bottom:
             # GC watermark: everything below it now lives in the bottom
             # level and has had range deletes applied.
@@ -576,6 +745,11 @@ class LSMTree:
         w = self.seq
         if self.mem:
             w = min(w, min(s for s, _, _ in self.mem.values()))
+        for fz in self.frozen:
+            # Sealed-but-unflushed entries are above the bottom level:
+            # they hold the GC floor down exactly like the memtable.
+            if len(fz.seqs):
+                w = min(w, fz.min_seq)
         for j in range(bottom_idx):
             lvl = self.levels[j]
             if lvl is not None and len(lvl):
@@ -585,7 +759,7 @@ class LSMTree:
     # ---------------------------------------------------------------- misc
     @property
     def num_entries(self) -> int:
-        return len(self.mem) + sum(
+        return len(self.mem) + sum(len(f) for f in self.frozen) + sum(
             len(l) for l in self.levels if l is not None)
 
     @property
@@ -597,7 +771,8 @@ class LSMTree:
 
     @property
     def memory_bytes(self) -> int:
-        mem = len(self.mem) * self.config.entry_size
+        mem = (len(self.mem) + sum(len(f) for f in self.frozen)) * \
+            self.config.entry_size
         blooms = sum(l.bloom.nbytes for l in self.levels if l is not None)
         fences = sum(
             l.data_blocks() * self.config.key_size
@@ -609,6 +784,8 @@ class LSMTree:
         return {
             "entries": self.num_entries,
             "levels": [len(l) if l is not None else 0 for l in self.levels],
+            "frozen": [len(f) for f in self.frozen],
+            "struct_epoch": self.struct_epoch,
             "seq": self.seq,
             "disk_bytes": self.disk_bytes,
             "memory_bytes": self.memory_bytes,
