@@ -96,6 +96,20 @@ u = d["acceptance"]["bg_upload_bytes_ratio"]
 assert u is not None and u < 1.0, \
     f"background-scheduler upload bytes not lower: ratio {u} >= 1.0"
 print(f"check OK: background steady-state upload bytes ratio {u} < 1.0")
+# Process-parallel gate: measured COMPUTE-BOUND wall (io_wait_s=0),
+# one worker process per shard vs serial in-process.  Core-aware —
+# process parallelism can only speed up host compute when the host has
+# cores to run it on: >= 1.8x with >= 4 usable cores, >= 1.1x with 2-3
+# cores, and on a 1-core box only a sanity floor (>= 0.45x) pinning
+# that the shared-memory transport stays within ~2x of in-process.
+p = d["acceptance"]["proc_wall_speedup"]
+cpus = d["acceptance"]["proc_host_cpus"]
+need = 1.8 if cpus >= 4 else (1.1 if cpus >= 2 else 0.45)
+assert p is not None and p >= need, \
+    f"proc-parallel wall speedup regressed: {p}x < {need}x " \
+    f"({cpus} usable cores)"
+print(f"check OK: proc-parallel compute-bound wall {p}x >= {need}x "
+      f"({cpus} usable cores, 4 workers)")
 EOF
 
 # Durability: cold-start recovery smoke.  Each row round-trips a store

@@ -57,6 +57,7 @@ def make_batches():
 def engine_config(wal_dir):
     from repro.engine import EngineConfig
     return EngineConfig(partition="hash", pipeline=False, devices=0,
+                        procs=0,
                         wal_dir=wal_dir, fsync="batch")
 
 
@@ -153,7 +154,7 @@ def parent_main() -> int:
 
     from repro.durable import recover
     from repro.engine import EngineConfig
-    rec = recover(wal_dir, config=EngineConfig(devices=0,
+    rec = recover(wal_dir, config=EngineConfig(procs=0, devices=0,
                                                pipeline=False))
     print(f"recovered: {rec.recovery}")
 

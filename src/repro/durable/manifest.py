@@ -122,7 +122,14 @@ class LevelManifest:
     def record_structure(self, shard: int, tree, *, reason: str) -> int:
         """One structural edit (flush / compaction / GC / recover):
         replace the shard's level record and commit a new version."""
-        desc = describe_tree(tree)
+        return self.record_structure_desc(shard, describe_tree(tree),
+                                          reason=reason)
+
+    def record_structure_desc(self, shard: int, desc: dict, *,
+                              reason: str) -> int:
+        """Commit a pre-described level record — how structure edits
+        from shard worker processes (which describe their own trees and
+        ship the document home) land in the parent's manifest."""
         with self._lock:
             self.doc["shards"][str(shard)] = desc
             self.doc["edits"].append({
@@ -186,16 +193,15 @@ def engine_config_doc(engine) -> dict:
     """Serialize everything recovery needs to rebuild the engine: the
     topology, the strategy, and the storage configs (flat dataclasses —
     JSON round-trips them losslessly)."""
-    tree = engine.shards[0].tree
     doc = {
         "num_shards": engine.num_shards,
-        "strategy": tree.strategy,
+        "strategy": engine.strategy,
         "partition": engine.router.partition,
-        "lsm_config": asdict(tree.config),
+        "lsm_config": asdict(engine.lsm_config),
         "gloran_config": None,
     }
-    if tree.gloran is not None:
-        gc = tree.gloran.config
+    gc = engine._gloran_eff
+    if gc is not None:
         doc["gloran_config"] = {
             "index": asdict(gc.index),
             "eve": asdict(gc.eve) if gc.eve is not None else None,

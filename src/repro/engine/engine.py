@@ -25,7 +25,7 @@ from ..core.gloran import GloranConfig
 from ..launch.mesh import shard_devices
 from ..lsm import LSMConfig, LSMTree
 from ..lsm.merge import merge_runs
-from ..lsm.scheduler import CompactionScheduler, level_rt_density
+from ..lsm.scheduler import CompactionScheduler
 from ..obs import MetricsRegistry, span
 from .executor import EngineConfig, ShardExecutor
 from .pending import PendingBatch
@@ -63,6 +63,40 @@ def _resolve_devices(config: EngineConfig, num_shards: int) -> list | None:
     return shard_devices(num_shards, limit=want)
 
 
+def _resolve_procs(config: EngineConfig, num_shards: int) -> int:
+    """Worker-process count, or 0 for the in-process path.
+
+    ``EngineConfig.procs`` wins; None defers to ``REPRO_ENGINE_PROCS``;
+    unset/0 = off (byte-identical in-process execution).  N spawns
+    min(N, num_shards) workers, shards assigned round-robin.
+    """
+    want = config.procs
+    if want is None:
+        env = os.environ.get("REPRO_ENGINE_PROCS", "").strip()
+        want = int(env) if env else 0
+    want = int(want or 0)
+    return min(want, num_shards) if want > 0 else 0
+
+
+def _merge_cache_snaps(snaps: list) -> dict:
+    """Per-shard BlockCache snapshots -> one fleet rollup."""
+    hits = sum(s["hits"] for s in snaps)
+    misses = sum(s["misses"] for s in snaps)
+    by_class: dict = {}
+    for s in snaps:
+        for cls, d in s["by_class"].items():
+            agg = by_class.setdefault(cls, {"hits": 0, "misses": 0})
+            agg["hits"] += d["hits"]
+            agg["misses"] += d["misses"]
+    for d in by_class.values():
+        tot = d["hits"] + d["misses"]
+        d["hit_rate"] = d["hits"] / tot if tot else 0.0
+    return {"hits": hits, "misses": misses,
+            "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "by_class": by_class,
+            "per_shard": snaps}
+
+
 class Engine:
     """Sharded, batched execution of point AND range ops.
 
@@ -95,10 +129,19 @@ class Engine:
     def __init__(self, num_shards: int = 1, strategy: str = "gloran",
                  lsm_config: LSMConfig | None = None,
                  gloran_config: GloranConfig | None = None,
-                 config: EngineConfig | None = None):
+                 config: EngineConfig | None = None,
+                 _recover_from: str | None = None):
         self.config = config or EngineConfig()
         self.num_shards = int(num_shards)
+        self.strategy = strategy
         base = lsm_config or LSMConfig()
+        self.lsm_config = base
+        self.gloran_config = gloran_config
+        # The gloran config the shards actually run (GloranIndex
+        # defaults None to GloranConfig()); the manifest's config doc
+        # serializes THIS so recovery rebuilds identically.
+        self._gloran_eff = ((gloran_config or GloranConfig())
+                            if strategy == "gloran" else None)
         self.router = ShardRouter(self.num_shards,
                                   partition=self.config.partition,
                                   universe=base.key_universe)
@@ -108,13 +151,6 @@ class Engine:
         # device, so pipelined shard workers stop serializing on the
         # default device.
         self.devices = _resolve_devices(self.config, self.num_shards)
-        self.shards = []
-        for s in range(self.num_shards):
-            tree = LSMTree(base, strategy=strategy,
-                           gloran_config=gloran_config)
-            dev = self.devices[s] if self.devices is not None else None
-            self.shards.append(ShardExecutor(tree, self.config,
-                                             device=dev))
         # Background delete-aware compaction (lsm/scheduler.py):
         # ``EngineConfig.scheduler`` wins; None defers to
         # REPRO_ENGINE_BG_COMPACT; unset/0 = off (the inline flush
@@ -124,11 +160,57 @@ class Engine:
             env = os.environ.get("REPRO_ENGINE_BG_COMPACT", "").strip()
             sched = bool(env) and env != "0"
         self.background = bool(sched)
-        if self.background:
-            for sh in self.shards:
-                sh.attach_scheduler(CompactionScheduler(
-                    sh.tree, max_frozen=self.config.max_frozen,
-                    tombstone_trigger=self.config.tombstone_trigger))
+        # A directory that already holds acknowledged frames is refused
+        # — recovery must fold them in first, or acked writes would be
+        # silently orphaned.  (``_recover_from`` is that fold-in:
+        # ``repro.durable.recover`` passes it in procs mode so each
+        # worker replays its own stream before serving.)
+        if self.config.wal_dir and not _recover_from:
+            from ..durable.wal import wal_has_frames
+            if wal_has_frames(self.config.wal_dir):
+                raise RuntimeError(
+                    f"WAL at {self.config.wal_dir} holds acknowledged "
+                    "frames; open it with repro.durable.recover() "
+                    "instead of a fresh Engine")
+        # Process-parallel shard execution (engine/procpool.py):
+        # ``EngineConfig.procs`` / REPRO_ENGINE_PROCS; 0 = in-process.
+        self.procs = _resolve_procs(self.config, self.num_shards)
+        self._proc_pool = None
+        if _recover_from and not self.procs:
+            raise RuntimeError("_recover_from is the procs-mode "
+                               "recovery path; use durable.recover()")
+        if self.procs:
+            from .procpool import ProcPool
+            if self.devices is not None:
+                import jax
+                device_ids = [d.id for d in self.devices]
+                host_devices = len(jax.devices())
+            else:
+                device_ids = [None] * self.num_shards
+                host_devices = 1
+            self._proc_pool = ProcPool(
+                num_shards=self.num_shards, procs=self.procs,
+                strategy=strategy, lsm_config=base,
+                gloran_config=gloran_config, config=self.config,
+                background=self.background, device_ids=device_ids,
+                host_devices=host_devices,
+                wal_dir=self.config.wal_dir or _recover_from,
+                replay=bool(_recover_from))
+            self.shards = self._proc_pool.shards
+        else:
+            self.shards = []
+            for s in range(self.num_shards):
+                tree = LSMTree(base, strategy=strategy,
+                               gloran_config=gloran_config)
+                dev = (self.devices[s] if self.devices is not None
+                       else None)
+                self.shards.append(ShardExecutor(tree, self.config,
+                                                 device=dev))
+            if self.background:
+                for sh in self.shards:
+                    sh.attach_scheduler(CompactionScheduler(
+                        sh.tree, max_frozen=self.config.max_frozen,
+                        tombstone_trigger=self.config.tombstone_trigger))
         self.stats_ = EngineStats()
         self.metrics = MetricsRegistry()
         pl = self.config.pipeline
@@ -139,21 +221,45 @@ class Engine:
         self._inflight: list[PendingBatch] = []
         self._inflight_lock = threading.Lock()
         # Durability (repro.durable): a configured wal_dir attaches a
-        # per-shard WAL stream + the level manifest.  A directory that
-        # already holds acknowledged frames is refused — recovery must
-        # fold them in first, or acked writes would be silently orphaned.
+        # per-shard WAL stream + the level manifest.  In procs mode the
+        # WAL writers live INSIDE the workers (append-before-ack holds
+        # within each worker's run_plan); the parent owns the manifest,
+        # applying structure edits shipped back with each reply.
         self.wal_dir: str | None = None
         self.manifest = None
         self.recovery = {"wall_s": 0.0, "frames_replayed": 0,
                          "snapshot_loaded": 0}
-        if self.config.wal_dir:
-            from ..durable.wal import wal_has_frames
-            if wal_has_frames(self.config.wal_dir):
-                raise RuntimeError(
-                    f"WAL at {self.config.wal_dir} holds acknowledged "
-                    "frames; open it with repro.durable.recover() "
-                    "instead of a fresh Engine")
+        if self.procs:
+            d = self.config.wal_dir or _recover_from
+            if d:
+                self._attach_proc_durability(
+                    d, recovered=bool(_recover_from))
+        elif self.config.wal_dir:
             self._attach_durability(self.config.wal_dir)
+
+    def _attach_proc_durability(self, wal_dir: str, *,
+                                recovered: bool) -> None:
+        """Procs-mode durability wiring: manifest in the parent, WAL
+        writers in the workers (already attached by ProcPool)."""
+        from ..durable.manifest import LevelManifest, engine_config_doc
+        self.wal_dir = wal_dir
+        if recovered:
+            manifest = LevelManifest.load(os.path.join(wal_dir,
+                                                       "manifest"))
+        else:
+            manifest = LevelManifest(
+                os.path.join(wal_dir, "manifest"),
+                config=engine_config_doc(self), fsync=False)
+            manifest.commit(fsync=self.config.fsync != "never")
+        self.manifest = manifest
+        for sh in self.shards:
+            sh.manifest = manifest
+        if recovered:
+            for s, desc in sorted(
+                    self._proc_pool.recovered_descs.items()):
+                manifest.record_structure_desc(s, desc, reason="recover")
+            self.recovery["frames_replayed"] = \
+                self._proc_pool.frames_replayed
 
     def _attach_durability(self, wal_dir: str, *, manifest=None,
                            writers: list | None = None) -> None:
@@ -314,9 +420,11 @@ class Engine:
             for p in self._pools:
                 p.shutdown(wait=True)
             self._pools = None
-        for sh in self.shards:
-            if sh.wal is not None:
-                sh.wal.close()
+        if self._proc_pool is not None:
+            self._proc_pool.close()
+        else:
+            for sh in self.shards:
+                sh.close()
 
     def __enter__(self) -> "Engine":
         return self
@@ -392,15 +500,15 @@ class Engine:
     # -------------------------------------------------------------- misc
     @property
     def io_reads(self) -> int:
-        return sum(sh.tree.io.reads for sh in self.shards)
+        return sum(sh.io_reads for sh in self.shards)
 
     @property
     def io_writes(self) -> int:
-        return sum(sh.tree.io.writes for sh in self.shards)
+        return sum(sh.io_writes for sh in self.shards)
 
     @property
     def num_entries(self) -> int:
-        return sum(sh.tree.num_entries for sh in self.shards)
+        return sum(sh.num_entries for sh in self.shards)
 
     @property
     def kernel_counters(self) -> KernelCounters:
@@ -417,22 +525,8 @@ class Engine:
                 for s, d in enumerate(self.devices)}
 
     def cache_snapshot(self) -> dict:
-        snaps = [sh.cache.snapshot() for sh in self.shards]
-        hits = sum(s["hits"] for s in snaps)
-        misses = sum(s["misses"] for s in snaps)
-        by_class: dict = {}
-        for s in snaps:
-            for cls, d in s["by_class"].items():
-                agg = by_class.setdefault(cls, {"hits": 0, "misses": 0})
-                agg["hits"] += d["hits"]
-                agg["misses"] += d["misses"]
-        for d in by_class.values():
-            tot = d["hits"] + d["misses"]
-            d["hit_rate"] = d["hits"] / tot if tot else 0.0
-        return {"hits": hits, "misses": misses,
-                "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
-                "by_class": by_class,
-                "per_shard": snaps}
+        return _merge_cache_snaps([sh.cache_snapshot()
+                                   for sh in self.shards])
 
     def reset_stats(self) -> None:
         """Start a fresh stats window: drain in-flight work, then zero
@@ -446,27 +540,36 @@ class Engine:
 
     def stats(self) -> dict:
         self.drain()
-        staging = [
-            {"shard": s, **sh.tree.gloran.buffer_snapshot()}
-            for s, sh in enumerate(self.shards)
-            if sh.tree.gloran is not None]
+        # ONE per-shard ledger document each — in-process executors
+        # read their tree directly, proc shards round-trip a STATS
+        # message to their worker.  Everything below aggregates these
+        # documents only, so both modes share one code path, and the
+        # values are cumulative snapshots: calling stats() twice
+        # without intervening work returns identical numbers.
+        fulls = [sh.stats_full() for sh in self.shards]
+        staging = [{"shard": s, **f["staging"]}
+                   for s, f in enumerate(fulls)
+                   if f["staging"] is not None]
         if staging:
             self.stats_.record_staging(staging)
+        kern = KernelCounters()
+        for f in fulls:
+            kern.merge(KernelCounters.from_snapshot(f["kernels"]))
         out = {
             "num_shards": self.num_shards,
             "partition": self.router.partition,
             "pipeline": self.pipeline_default,
+            "procs": self.procs,
             "devices": {
                 "enabled": self.devices is not None,
                 "distinct": len(set(self.device_map().values())),
                 "per_shard": self.device_map(),
             },
-            "entries": self.num_entries,
+            "entries": sum(f["entries"] for f in fulls),
             "engine": self.stats_.snapshot(),
-            "io": merge_io_snapshots(
-                [sh.tree.io.snapshot() for sh in self.shards]),
-            "cache": self.cache_snapshot(),
-            "kernels": self.kernel_counters.snapshot(),
+            "io": merge_io_snapshots([f["io"] for f in fulls]),
+            "cache": _merge_cache_snaps([f["cache"] for f in fulls]),
+            "kernels": kern.snapshot(),
         }
         # One namespaced flat schema absorbing every subsystem ledger
         # (kernels, I/O, cache incl. per-op-class, staging occupancy,
@@ -491,10 +594,11 @@ class Engine:
                                  if k != "per_shard"})
         # Background-scheduler health: job/stall counters + compaction
         # debt across the fleet (``sched.*`` metrics).
-        if self.background:
+        scheds = [f["sched"] for f in fulls if f["sched"] is not None]
+        if self.background and scheds:
             agg2: dict = {}
-            for sh in self.shards:
-                for k, v in sh.scheduler.counters().items():
+            for c in scheds:
+                for k, v in c.items():
                     agg2[k] = agg2.get(k, 0) + v
             agg2["stall_seconds"] = round(agg2["stall_seconds"], 6)
             out["sched"] = agg2
@@ -504,30 +608,39 @@ class Engine:
         # estimated range-tombstone density — the scheduler's priority
         # inputs, inspectable whether or not background mode is on.
         lsm_m: dict = {}
-        for sh in self.shards:
-            for i, b in sh.tree.compaction_bytes.items():
+        for f in fulls:
+            for i, b in f["lsm"]["compaction_bytes"].items():
                 k = f"compaction.bytes.L{i}"
                 lsm_m[k] = lsm_m.get(k, 0) + b
-            for i, b in sh.tree.rt_compaction_bytes.items():
+            for i, b in f["lsm"]["rt_compaction_bytes"].items():
                 k = f"rt_compaction.bytes.L{i}"
                 lsm_m[k] = lsm_m.get(k, 0) + b
-        for i in range(max((len(sh.tree.levels)
-                            for sh in self.shards), default=0)):
-            dens = [level_rt_density(sh.tree, i) for sh in self.shards
-                    if i < len(sh.tree.levels)]
+        for i in range(max((f["lsm"]["num_levels"] for f in fulls),
+                           default=0)):
+            dens = [f["lsm"]["rt_density"][i] for f in fulls
+                    if i < f["lsm"]["num_levels"]]
             if dens:
                 lsm_m[f"rt_density.L{i}"] = round(max(dens), 4)
         if lsm_m:
             out["lsm"] = lsm_m
             m.absorb("lsm", lsm_m)
-        wals = [sh.wal for sh in self.shards if sh.wal is not None]
+        wals = [f["wal"] for f in fulls if f["wal"] is not None]
         if wals:
             agg: dict = {}
-            for w in wals:
-                for k, v in w.counters().items():
+            for c in wals:
+                for k, v in c.items():
                     agg[k] = agg.get(k, 0) + v
             out["wal"] = agg
             m.absorb("wal", agg)
+        # Shared-memory transport ledger (procs mode): bytes shipped
+        # each way + the enqueue->dequeue latency histogram.
+        if self._proc_pool is not None:
+            t = self._proc_pool.transport_snapshot()
+            out["proc"] = t
+            m.absorb("proc", {k: v for k, v in t.items()
+                              if k != "dequeue_latency_us"})
+            m.absorb("proc.dequeue_latency_us",
+                     t["dequeue_latency_us"])
         m.absorb("recovery", self.recovery)
         out["metrics"] = m.snapshot()
         return out

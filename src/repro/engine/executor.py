@@ -125,6 +125,15 @@ class EngineConfig:
     # default — proactive compaction intentionally diverges from the
     # inline level shapes to reclaim GLORAN garbage early).
     tombstone_trigger: float | None = None
+    # Process-parallel shard execution (engine/procpool.py): None = env
+    # (REPRO_ENGINE_PROCS; unset/0 = off — the in-process path,
+    # byte-identical).  N spawns min(N, num_shards) worker processes,
+    # shards assigned round-robin, ShardPlans shipped as shared-memory
+    # columnar frames — real multi-core wall speedup on compute-bound
+    # work the GIL otherwise serializes.
+    procs: int | None = None
+    # Capacity of each per-direction shared-memory transport ring.
+    proc_ring_bytes: int = 32 << 20
 
 
 class ShardExecutor:
@@ -265,6 +274,55 @@ class ShardExecutor:
             # only after the background flush durably publishes.
             self.scheduler.drain()
         self._maybe_record_structure(fp0, "flush")
+
+    # ------------------------------------------------ uniform surface
+    # The engine aggregates shards through these accessors ONLY, so an
+    # in-process executor and a ``procpool.ProcShard`` proxy (whose tree
+    # lives in a worker process) are interchangeable.
+    @property
+    def io_reads(self) -> int:
+        return self.tree.io.reads
+
+    @property
+    def io_writes(self) -> int:
+        return self.tree.io.writes
+
+    @property
+    def num_entries(self) -> int:
+        return self.tree.num_entries
+
+    def cache_snapshot(self) -> dict:
+        return self.cache.snapshot()
+
+    def stats_full(self) -> dict:
+        """Every per-shard ledger ``engine.stats()`` rolls up, in one
+        JSON-able document (the procpool STATS reply body)."""
+        from ..lsm.scheduler import level_rt_density
+        tree = self.tree
+        return {
+            "io": tree.io.snapshot(),
+            "entries": int(tree.num_entries),
+            "kernels": self.kernels.snapshot(),
+            "cache": self.cache.snapshot(),
+            "staging": (tree.gloran.buffer_snapshot()
+                        if tree.gloran is not None else None),
+            "sched": (self.scheduler.counters()
+                      if self.scheduler is not None else None),
+            "wal": self.wal.counters() if self.wal is not None else None,
+            "lsm": {
+                "compaction_bytes": {int(i): int(b) for i, b in
+                                     tree.compaction_bytes.items()},
+                "rt_compaction_bytes": {int(i): int(b) for i, b in
+                                        tree.rt_compaction_bytes.items()},
+                "rt_density": {i: round(level_rt_density(tree, i), 4)
+                               for i in range(len(tree.levels))},
+                "num_levels": len(tree.levels),
+            },
+        }
+
+    def close(self) -> None:
+        if self.wal is not None:
+            self.wal.close()
 
     # ------------------------------------------------------- typed plans
     def run_plan(self, sp: ShardPlan) -> tuple[list, float]:

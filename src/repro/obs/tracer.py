@@ -102,6 +102,11 @@ class Tracer:
         self.max_events = int(max_events)
         self.dropped = 0
         self._events: list[tuple] = []
+        # Spans absorbed from other processes (shard workers): same
+        # tuple shape prefixed with (pid, process name).  perf_counter
+        # is CLOCK_MONOTONIC system-wide on Linux, so foreign
+        # timestamps land on this tracer's clock directly.
+        self._foreign: list[tuple] = []
         self._lock = threading.Lock()
         self._base = time.perf_counter()
 
@@ -125,8 +130,34 @@ class Tracer:
     def clear(self) -> None:
         with self._lock:
             self._events.clear()
+            self._foreign.clear()
             self.dropped = 0
             self._base = time.perf_counter()
+
+    # --------------------------------------------- cross-process merge
+    def drain(self) -> list[list]:
+        """Return + clear the recorded spans as JSON-able rows — the
+        shipping format a shard worker sends home with each reply.  The
+        epoch is kept, so successive drains stay on one timeline."""
+        with self._lock:
+            snap, self._events = self._events, []
+        return [[n, t0, t1, tid, tname, attrs]
+                for n, t0, t1, tid, tname, attrs in snap]
+
+    def absorb(self, rows: list, *, pid: int,
+               process_name: str | None = None) -> None:
+        """Merge spans drained in another process into this trace,
+        keyed under that process's pid so the Chrome export renders one
+        named track group per worker."""
+        with self._lock:
+            for r in rows:
+                if (len(self._events) + len(self._foreign)
+                        >= self.max_events):
+                    self.dropped += 1
+                    continue
+                self._foreign.append((int(pid), process_name, r[0],
+                                      float(r[1]), float(r[2]),
+                                      int(r[3]), r[4], r[5] or {}))
 
     # ------------------------------------------------------------ views
     def events(self) -> list[dict]:
@@ -143,22 +174,35 @@ class Tracer:
         so Perfetto labels each shard worker's track."""
         with self._lock:
             snap = list(self._events)
+            foreign = list(self._foreign)
             base = self._base
         out = [{"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
                 "args": {"name": "repro-engine"}}]
-        seen: dict[int, str] = {}
-        for name, t0, t1, tid, tname, attrs in snap:
-            if tid not in seen:
-                seen[tid] = tname
-                out.append({"name": "thread_name", "ph": "M", "pid": 1,
+        seen: dict[tuple, str] = {}
+
+        def emit(pid, name, t0, t1, tid, tname, attrs):
+            if (pid, tid) not in seen:
+                seen[(pid, tid)] = tname
+                out.append({"name": "thread_name", "ph": "M", "pid": pid,
                             "tid": tid, "args": {"name": tname}})
             ev = {"name": name, "cat": name.split(".", 1)[0], "ph": "X",
-                  "pid": 1, "tid": tid,
+                  "pid": pid, "tid": tid,
                   "ts": round((t0 - base) * 1e6, 3),
                   "dur": round((t1 - t0) * 1e6, 3)}
             if attrs:
                 ev["args"] = attrs
             out.append(ev)
+
+        for name, t0, t1, tid, tname, attrs in snap:
+            emit(1, name, t0, t1, tid, tname, attrs)
+        pids_named: set[int] = set()
+        for pid, pname, name, t0, t1, tid, tname, attrs in foreign:
+            if pid not in pids_named:
+                pids_named.add(pid)
+                out.append({"name": "process_name", "ph": "M",
+                            "pid": pid, "tid": 0,
+                            "args": {"name": pname or f"pid {pid}"}})
+            emit(pid, name, t0, t1, tid, tname, attrs)
         return out
 
     def export_chrome(self, path: str) -> dict:

@@ -170,12 +170,17 @@ def test_metrics_registry_namespacing_and_schema():
 
 # --------------------------------------------------- engine integration
 def _engine(**cfg):
+    # procs pinned to 0: these tests introspect the parent tracer's own
+    # span records (tr.events()) — in procs mode the shard spans are
+    # foreign rows absorbed from the workers and only surface through
+    # chrome_events(); tests/test_procs.py covers that path.
+    cfg.setdefault("procs", 0)
     eng = Engine(num_shards=2, strategy="gloran",
                  lsm_config=LSMConfig(buffer_capacity=64, size_ratio=3,
                                       key_size=16, value_size=48,
                                       block_size=512,
                                       key_universe=UNIVERSE),
-                 config=EngineConfig(**cfg) if cfg else None)
+                 config=EngineConfig(**cfg))
     keys = np.arange(0, 4000, 2, dtype=np.uint64)
     eng.put_batch(keys, keys + np.uint64(1))
     eng.flush()
@@ -275,7 +280,7 @@ def _engine4():
                                       key_size=16, value_size=48,
                                       block_size=512,
                                       key_universe=UNIVERSE),
-                 config=EngineConfig(pipeline=True, devices=4))
+                 config=EngineConfig(pipeline=True, devices=4, procs=0))
     keys = np.arange(0, 8000, 2, dtype=np.uint64)
     eng.put_batch(keys, keys + np.uint64(1))
     eng.flush()

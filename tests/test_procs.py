@@ -1,0 +1,356 @@
+"""Process-parallel shard execution: cross-mode parity + transport.
+
+The procpool contract is byte-identity: an engine whose shards live in
+worker processes (``EngineConfig.procs`` / ``REPRO_ENGINE_PROCS``) must
+return the same results AND charge the same I/O as the in-process path,
+for every strategy, device pinning, and scheduler mode.  The matrix
+here drives a mixed put/delete/range-delete/get/scan workload through
+procs {2, 4} x devices {0, 4} x scheduler {off, on} x all 5 strategies
+and diffs against a serial in-process reference.
+
+Worker spawn costs ~1s each, so only a strategy/mode-covering subset of
+the 40 cells runs by default; set ``REPRO_PROCS_FULL_MATRIX=1`` for all
+of them.  The satellites live here too: EngineConfig/WorkerSpec pickle
+round-trips (spawn safety), stats() idempotency under multi-worker
+merge, WAL stream-lock collision fail-fast, mid-stream close draining,
+and WAL recovery after a worker-mode run (both recovery modes).
+"""
+
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.eve import RAEConfig
+from repro.core.gloran import GloranConfig
+from repro.core.lsm_drtree import LSMDRTreeConfig
+from repro.engine import Engine, EngineConfig
+from repro.engine.procpool import WorkerSpec
+from repro.lsm import LSMConfig
+from repro.lsm.tree import STRATEGIES
+
+UNIVERSE = 1 << 20
+FULL = os.environ.get("REPRO_PROCS_FULL_MATRIX", "0") not in ("0", "")
+
+
+def small_lsm():
+    return LSMConfig(buffer_capacity=64, size_ratio=3, key_size=16,
+                     value_size=48, block_size=512,
+                     key_universe=UNIVERSE)
+
+
+def small_gloran():
+    return GloranConfig(
+        index=LSMDRTreeConfig(buffer_capacity=16, size_ratio=3,
+                              key_size=16, block_size=512),
+        eve=RAEConfig(capacity=64, key_universe=UNIVERSE))
+
+
+def make_engine(*, strategy="gloran", shards=4, procs=0, devices=0,
+                scheduler=False, pipeline=None, **kw):
+    cfg = EngineConfig(procs=procs, devices=devices, scheduler=scheduler,
+                       pipeline=bool(procs) if pipeline is None
+                       else pipeline,
+                       cache_blocks=256, kernel_min_batch=1,
+                       kernel_min_areas=1, kernel_min_filter=1,
+                       cascade_compiled=True, **kw)
+    return Engine(shards, strategy=strategy, lsm_config=small_lsm(),
+                  gloran_config=small_gloran(), config=cfg)
+
+
+def drive(eng, rounds=2, universe=2000, seed=7):
+    """Mixed workload with flushes; returns every result surface."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(rounds):
+        keys = rng.integers(0, universe, size=220).astype(np.uint64)
+        vals = rng.integers(1, 1 << 40, size=220, dtype=np.uint64)
+        eng.put_batch(keys, vals)
+        eng.delete_batch(keys[:30])
+        lo = int(rng.integers(0, universe // 2))
+        eng.range_delete_batch([(lo, lo + 400), (lo + 600, lo + 900)])
+        probe = rng.integers(0, universe, size=300).astype(np.uint64)
+        found, got = eng.get_batch(probe)
+        out.append(("get", found, got))
+        for k, v in eng.range_scan_batch([(0, universe // 3),
+                                          (universe // 4, universe)]):
+            out.append(("scan", k, v))
+    return out
+
+
+def assert_same_results(ref, got):
+    assert len(ref) == len(got)
+    for (tag_a, a1, a2), (tag_b, b1, b2) in zip(ref, got):
+        assert tag_a == tag_b
+        assert np.array_equal(a1, b1)
+        if tag_a == "get":
+            assert np.array_equal(a2[a1], b2[b1])  # values where found
+        else:
+            assert np.array_equal(a2, b2)
+
+
+_REFS: dict = {}
+
+
+def reference(strategy, scheduler=False):
+    """Serial in-process reference results + IOStats, cached per
+    (strategy, scheduler) — the background scheduler runs extra
+    compactions at drain points, so its I/O ledger is compared against
+    a scheduler-on in-process run, not the quiescent one."""
+    key = (strategy, scheduler)
+    if key not in _REFS:
+        eng = make_engine(strategy=strategy, procs=0, pipeline=False,
+                          scheduler=scheduler)
+        res = drive(eng)
+        _REFS[key] = (res, eng.stats()["io"], eng.num_entries)
+        eng.close()
+    return _REFS[key]
+
+
+# One cell per strategy x {procs, devices, scheduler} combination, with
+# every strategy and every mode axis covered in the always-on subset.
+SUBSET = [
+    ("gloran", 2, 0, False), ("gloran", 2, 0, True),
+    ("gloran", 2, 4, False), ("gloran", 4, 4, True),
+    ("decomp", 2, 0, False), ("lookup_delete", 2, 0, True),
+    ("scan_delete", 2, 4, False), ("lrr", 4, 0, True),
+]
+MATRIX = [(s, p, d, b) for s in STRATEGIES for p in (2, 4)
+          for d in (0, 4) for b in (False, True)]
+
+
+@pytest.mark.parametrize("strategy,procs,devices,scheduler", MATRIX)
+def test_parity_matrix(strategy, procs, devices, scheduler):
+    if not FULL and (strategy, procs, devices, scheduler) not in SUBSET:
+        pytest.skip("full matrix gated behind REPRO_PROCS_FULL_MATRIX=1")
+    ref_res, ref_io, ref_entries = reference(strategy, scheduler)
+    eng = make_engine(strategy=strategy, procs=procs, devices=devices,
+                      scheduler=scheduler)
+    try:
+        assert eng.procs == procs
+        res = drive(eng)
+        assert_same_results(ref_res, res)
+        st = eng.stats()
+        assert st["io"] == ref_io
+        assert st["entries"] == ref_entries
+        assert st["proc"]["workers"] == procs
+        assert st["proc"]["bytes_sent"] > 0
+        assert st["proc"]["dequeue_latency_us"]["count"] > 0
+    finally:
+        eng.close()
+
+
+def test_procs_env_resolution(monkeypatch):
+    monkeypatch.setenv("REPRO_ENGINE_PROCS", "2")
+    eng = make_engine(procs=None, shards=4)
+    try:
+        assert eng.procs == 2
+        found, vals = eng.get_batch(np.arange(4, dtype=np.uint64))
+        assert not found.any()
+    finally:
+        eng.close()
+    monkeypatch.setenv("REPRO_ENGINE_PROCS", "0")
+    eng = make_engine(procs=None, shards=4)
+    try:
+        assert eng.procs == 0 and eng._proc_pool is None
+    finally:
+        eng.close()
+
+
+def test_procs_capped_at_num_shards():
+    eng = make_engine(procs=8, shards=2)
+    try:
+        assert eng.procs == 2
+        eng.put_batch(np.arange(10, dtype=np.uint64),
+                      np.arange(10, dtype=np.uint64) + np.uint64(1))
+        found, vals = eng.get_batch(np.arange(10, dtype=np.uint64))
+        assert found.all()
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------- spawn-safety audit
+
+def test_engineconfig_pickle_roundtrip():
+    cfg = EngineConfig(procs=3, devices=2, cache_blocks=128,
+                       wal_dir="/tmp/x", scheduler=True,
+                       tombstone_trigger=0.5, io_wait_s=1e-5)
+    assert pickle.loads(pickle.dumps(cfg)) == cfg
+
+
+def test_workerspec_pickle_roundtrip():
+    spec = WorkerSpec(worker_id=1, shard_ids=(1, 3), device_ids=(0, 2),
+                      host_devices=4, strategy="gloran",
+                      lsm_config=small_lsm(),
+                      gloran_config=small_gloran(),
+                      engine_config=EngineConfig(procs=0),
+                      background=True, wal_dir=None, replay=False,
+                      trace=False)
+    back = pickle.loads(pickle.dumps(spec))
+    assert back.shard_ids == (1, 3)
+    assert back.lsm_config == small_lsm()
+    assert back.gloran_config == small_gloran()
+
+
+def test_spawn_smoke_single_worker():
+    """Minimal end-to-end spawn: 1 worker, 1 shard, one round trip."""
+    eng = make_engine(shards=1, procs=1, pipeline=False)
+    try:
+        eng.put(5, 55)
+        assert eng.get(5) == 55
+        assert eng.get(6) is None
+    finally:
+        eng.close()
+
+
+def test_proc_shard_tree_access_raises():
+    eng = make_engine(procs=2)
+    try:
+        with pytest.raises(RuntimeError, match="worker process"):
+            _ = eng.shards[0].tree
+    finally:
+        eng.close()
+
+
+def test_worker_error_propagates():
+    eng = make_engine(procs=2)
+    try:
+        with pytest.raises(RuntimeError, match="shard worker"):
+            # A malformed control message reaches the worker and its
+            # error (not a hang) comes back with the traceback.
+            eng.shards[0].worker.request(3, [b"not json"])
+    finally:
+        eng.close()
+
+
+# --------------------------------------------- stats idempotency (sat)
+
+def test_stats_idempotent_across_calls():
+    """Regression: per-worker counters are merged from cumulative
+    snapshots, so stats() twice with no work between must diff clean —
+    no double-counted kernel/io/wal/transport ledgers."""
+    eng = make_engine(procs=2, scheduler=True)
+    try:
+        drive(eng, rounds=1)
+        s1 = eng.stats()
+        s2 = eng.stats()
+        for key in ("io", "kernels", "entries", "cache", "lsm",
+                    "sched", "wal"):
+            assert s1.get(key) == s2.get(key), key
+        # Transport counters keep counting (the stats round trips are
+        # requests themselves) but never double: strictly monotonic,
+        # bounded by the control messages stats() sends (one scheduler
+        # drain tick + one STATS per shard).
+        assert s2["proc"]["requests"] > s1["proc"]["requests"]
+        assert s2["proc"]["requests"] - s1["proc"]["requests"] <= \
+            2 * len(eng.shards)
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------- wal + locks
+
+def test_wal_dir_collision_fails_fast(tmp_path):
+    a = make_engine(procs=2, shards=2,
+                    wal_dir=str(tmp_path), fsync="never")
+    try:
+        with pytest.raises(RuntimeError,
+                           match="owned by live process|failed to start"):
+            Engine(2, strategy="gloran", lsm_config=small_lsm(),
+                   gloran_config=small_gloran(),
+                   config=EngineConfig(procs=2, devices=0,
+                                       wal_dir=str(tmp_path),
+                                       fsync="never"))
+    finally:
+        a.close()
+    # Locks release on clean close: the dir is claimable again once the
+    # (empty) streams are gone.
+
+
+def test_mid_stream_close_drains(tmp_path):
+    """close() with pipelined batches in flight must collect them all
+    (acked results complete) before tearing the workers down."""
+    from repro.engine import OpBatch
+    eng = make_engine(procs=2, wal_dir=str(tmp_path), fsync="never")
+    try:
+        keys = np.arange(500, dtype=np.uint64)
+        eng.put_batch(keys, keys + np.uint64(1))
+        pends = [eng.submit(OpBatch.gets(keys)) for _ in range(4)]
+    finally:
+        eng.close()
+    for p in pends:
+        found, vals = p.get_results()
+        assert found.all()
+        assert np.array_equal(vals, keys + np.uint64(1))
+
+
+def test_wal_recovery_after_procs_run(tmp_path):
+    """Acceptance: a worker-mode durable run recovers byte-identically
+    — via the in-process recovery path AND the procs recovery path."""
+    from repro.durable import recover
+    ref = make_engine(procs=0, pipeline=False)
+    ref_res = drive(ref)
+    ref_io = ref.stats()["io"]
+    ref.close()
+
+    eng = make_engine(procs=2, wal_dir=str(tmp_path), fsync="never")
+    res = drive(eng)
+    assert_same_results(ref_res, res)
+    eng.close()
+
+    probe = np.arange(0, 2000, 3, dtype=np.uint64)
+    expected = None
+    for procs in (0, 2):
+        rec = recover(str(tmp_path),
+                      config=EngineConfig(procs=procs, devices=0,
+                                          pipeline=procs > 0,
+                                          cache_blocks=256,
+                                          kernel_min_batch=1,
+                                          kernel_min_areas=1,
+                                          kernel_min_filter=1,
+                                          cascade_compiled=True))
+        try:
+            assert rec.recovery["frames_replayed"] > 0
+            found, vals = rec.get_batch(probe)
+            k, v = rec.range_scan(0, UNIVERSE)
+            if expected is None:
+                expected = (found, vals, k, v)
+            else:
+                assert np.array_equal(expected[0], found)
+                assert np.array_equal(expected[1][found], vals[found])
+                assert np.array_equal(expected[2], k)
+                assert np.array_equal(expected[3], v)
+        finally:
+            rec.close()
+
+
+def test_snapshot_refused_in_procs_mode(tmp_path):
+    from repro.durable import take_snapshot
+    eng = make_engine(procs=2, wal_dir=str(tmp_path), fsync="never")
+    try:
+        eng.put(1, 2)
+        with pytest.raises(RuntimeError, match="procs"):
+            take_snapshot(eng)
+    finally:
+        eng.close()
+
+
+# ------------------------------------------------------------ tracing
+
+def test_worker_spans_merge_into_one_trace():
+    from repro import obs
+    with obs.enabled() as tr:
+        eng = make_engine(procs=2, shards=2)
+        try:
+            keys = np.arange(64, dtype=np.uint64)
+            eng.put_batch(keys, keys + np.uint64(1))
+            eng.get_batch(keys)
+        finally:
+            eng.close()
+    ev = tr.chrome_events()
+    pnames = {e["args"]["name"] for e in ev if e["name"] == "process_name"}
+    assert "repro-engine" in pnames
+    assert sum(n.startswith("shard-worker-") for n in pnames) == 2
+    worker_spans = [e for e in ev if e.get("ph") == "X" and e["pid"] != 1]
+    assert any(e["name"].startswith("shard.") for e in worker_spans)
